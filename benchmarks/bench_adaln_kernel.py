@@ -1,0 +1,95 @@
+"""Paper Table 2: per-operator Fused-AdaLN benchmark across sequence lengths.
+
+Three measurements per N:
+* CPU wall time, fused-vjp vs naive-discrete (forward and backward) — the
+  directly measurable part in this container;
+* residual ("activation") bytes, measured from the actual VJP closures —
+  the paper's memory column (its ~61.9% saving claim);
+* derived v5e speedup from the HBM-traffic model (the op is memory-bound,
+  so time ratio ~= bytes ratio) — the analogue of the paper's 3.2-3.4x fwd
+  / up to 1.42x bwd speedups.
+
+D = 5120 (Wan-14B width), B = 1, N sweeps 8k..64k like the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_adaln.ref import adaln_fused_ref, adaln_naive
+
+from .common import residual_bytes, time_fn
+
+D = 2048  # CPU-tractable width (ratios are width-independent; v5e model uses 5120)
+NS = [8192, 16384, 32768]  # CPU-tractable slice of the paper's 8k-64k
+
+
+def _hbm_bytes_fwd(n, d, fused: bool, itemsize=2):
+    """v5e traffic model: reads+writes per variant.
+
+    naive: mean pass (r x) + var pass (r x) + normalize (r x, w xn) +
+           modulate (r xn, w y)  => 5 reads + 2 writes of [N, D]
+    fused: one read of x, one write of y (stats negligible)
+    """
+    nd = n * d * itemsize
+    return (2 if fused else 7) * nd
+
+
+def _hbm_bytes_bwd(n, d, fused: bool, itemsize=2):
+    """bwd traffic: naive does separate dx pass + a *strided* dmod reduction
+    (transpose-equivalent: extra read+write of [N, D]); fused D-tile reads
+    dy and x once, accumulates dmod in VMEM, writes dx."""
+    nd = n * d * itemsize
+    return (3 if fused else 6) * nd
+
+
+def run(csv: list[str]) -> dict:
+    rows = []
+    print(f"[adaln] {'N':>6} {'fwd_f(ms)':>10} {'fwd_n(ms)':>10} {'spd':>5} "
+          f"{'bwd_f(ms)':>10} {'bwd_n(ms)':>10} {'spd':>5} "
+          f"{'mem_f(MB)':>10} {'mem_n(MB)':>10} {'save':>6} {'v5e_fwd':>8} {'v5e_bwd':>8}")
+    for n in NS:
+        key = jax.random.PRNGKey(n)
+        x = jax.random.normal(key, (1, n, D), jnp.float32)
+        sc = jax.random.normal(key, (1, D), jnp.float32) * 0.1
+        sh = jax.random.normal(key, (1, D), jnp.float32) * 0.1
+        dy = jax.random.normal(key, (1, n, D), jnp.float32)
+
+        f_fused = jax.jit(lambda x, sc, sh: adaln_fused_ref(x, sc, sh, 1e-6))
+        f_naive = jax.jit(adaln_naive)
+        t_ff = time_fn(f_fused, x, sc, sh, warmup=1, iters=3)
+        t_fn = time_fn(f_naive, x, sc, sh, warmup=1, iters=3)
+
+        def mk_bwd(f):
+            def bwd(x, sc, sh, dy):
+                _, vjp = jax.vjp(f, x, sc, sh)
+                return vjp(dy)
+            return jax.jit(bwd)
+
+        t_bf = time_fn(mk_bwd(lambda x, sc, sh: adaln_fused_ref(x, sc, sh, 1e-6)), x, sc, sh, dy, warmup=1, iters=3)
+        t_bn = time_fn(mk_bwd(adaln_naive), x, sc, sh, dy, warmup=1, iters=3)
+
+        mem_f = residual_bytes(lambda x, sc, sh: adaln_fused_ref(x, sc, sh, 1e-6), x, sc, sh)
+        mem_n = residual_bytes(adaln_naive, x, sc, sh)
+        save = 1 - mem_f / mem_n
+
+        v5e_fwd = _hbm_bytes_fwd(n, D, False) / _hbm_bytes_fwd(n, D, True)
+        v5e_bwd = _hbm_bytes_bwd(n, D, False) / _hbm_bytes_bwd(n, D, True)
+
+        print(f"[adaln] {n:>6} {t_ff*1e3:>10.2f} {t_fn*1e3:>10.2f} "
+              f"{t_fn/t_ff:>4.2f}x {t_bf*1e3:>10.2f} {t_bn*1e3:>10.2f} "
+              f"{t_bn/t_bf:>4.2f}x {mem_f/2**20:>10.1f} {mem_n/2**20:>10.1f} "
+              f"{save*100:>5.1f}% {v5e_fwd:>7.2f}x {v5e_bwd:>7.2f}x")
+        csv.append(
+            f"adaln.N{n}.fwd,{t_ff*1e6:.1f},naive_us={t_fn*1e6:.1f};spd={t_fn/t_ff:.2f}x"
+        )
+        csv.append(
+            f"adaln.N{n}.bwd,{t_bf*1e6:.1f},naive_us={t_bn*1e6:.1f};spd={t_bn/t_bf:.2f}x"
+        )
+        csv.append(
+            f"adaln.N{n}.mem,0.0,fused_MB={mem_f/2**20:.1f};naive_MB={mem_n/2**20:.1f};"
+            f"saving={save*100:.1f}%;v5e_fwd={v5e_fwd:.2f}x;v5e_bwd={v5e_bwd:.2f}x"
+        )
+        rows.append((n, t_ff, t_fn, t_bf, t_bn, mem_f, mem_n))
+    return {"rows": rows}

@@ -1,0 +1,31 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time in seconds of a jax callable (blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def residual_bytes(f, *args) -> int:
+    """Bytes of VJP residuals ('activations kept for backward') of f —
+    measured directly from the vjp closure pytree."""
+    _, vjp_fn = jax.vjp(f, *args)
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(vjp_fn))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

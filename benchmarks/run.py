@@ -1,0 +1,67 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV at the end.
+
+    PYTHONPATH=src python -m benchmarks.run [--only cost_model,throughput,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+SECTIONS = [
+    ("cost_model", "paper §3.2: fit + correlation claims"),
+    ("throughput", "paper Fig.5/6/7: throughput + CV, 8/16 workers"),
+    ("adaln_kernel", "paper Table 2: fused AdaLN operator"),
+    ("fusion_system", "paper Table 1: system-level fusion"),
+    ("loss_convergence", "paper Fig.8: loss congruence"),
+    ("packing", "LM-side dual-constraint packing"),
+    ("roofline", "dry-run roofline terms (deliverable g)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    csv: list[str] = []
+    failures = []
+    for name, desc in SECTIONS:
+        if only is not None and name not in only:
+            continue
+        print(f"\n=== {name}: {desc} ===")
+        try:
+            if name == "cost_model":
+                from . import bench_cost_model as m
+            elif name == "throughput":
+                from . import bench_throughput as m
+            elif name == "adaln_kernel":
+                from . import bench_adaln_kernel as m
+            elif name == "fusion_system":
+                from . import bench_fusion_system as m
+            elif name == "loss_convergence":
+                from . import bench_loss_convergence as m
+            elif name == "packing":
+                from . import bench_packing as m
+            elif name == "roofline":
+                from . import roofline as m
+            m.run(csv)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for row in csv:
+        print(row)
+    if failures:
+        print(f"\nFAILED sections: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""AdaptiveLoad vs equal-token on a simulated 8/16-worker cluster —
+reproduces the shape of paper Figs. 5-7 in a few seconds.
+
+    PYTHONPATH=src python examples/bucketing_demo.py
+"""
+
+from repro.core import (
+    AnalyticDeviceModel,
+    BucketingPolicy,
+    CorpusSampler,
+    ModelDims,
+    fit_cost_model,
+    run_analytic_benchmark,
+    simulate_packed,
+    sweep_grid,
+)
+from repro.data.synthetic import wan_mixed_corpus
+
+dims = ModelDims(n_layers=40, d_model=5120, d_ff=13824, n_heads=40, head_dim=128)
+dev = AnalyticDeviceModel(dims, overhead=0.15)
+M_MEM, ACCUM = 150_000, 4
+
+model = fit_cost_model(run_analytic_benchmark(
+    dev, sweep_grid([8192, 16384, 32768, 49152], max_batch=16, m_mem=M_MEM)))
+shapes, weights = wan_mixed_corpus()
+m_comp = model.m_comp_for_target(model.predict(1, max(s.seq_len for s in shapes)) * 1.02)
+
+bb = BucketingPolicy(m_mem=M_MEM, mode="equal_token").make_buckets(shapes)
+ab = BucketingPolicy(m_mem=M_MEM, m_comp=m_comp, p=model.p).make_buckets(shapes)
+cost = lambda b, s: dev.step_time(b, s)
+
+print(f"{'workers':>8} {'policy':>12} {'tok/s':>10} {'cv_step':>8} {'compute_cv':>11}")
+for n in (8, 16):
+    for name, buckets, budget, bof in (
+        ("baseline", bb, ACCUM * M_MEM, lambda b: float(b.tokens)),
+        ("adaptive", ab, ACCUM * m_comp, lambda b: b.load(model.p)),
+    ):
+        r = simulate_packed(
+            CorpusSampler(buckets, weights), n, 300, cost,
+            budget=budget, budget_of=bof, jitter=0.04, seed=1,
+        )
+        print(f"{n:>8} {name:>12} {r.mean_throughput:>10,.0f} "
+              f"{r.mean_cv_step:>8.3f} {r.mean_compute_cv:>11.3f}")
+print("\npaper targets: +25.6% (8w) / +27.2% (16w) throughput; "
+      "compute CV 0.39 -> 0.189 (16w)")

@@ -1,0 +1,63 @@
+"""wan2.1 [mmdit] — the paper's own architecture: Wan-2.1-style video
+diffusion transformer with AdaLN-modulate conditioning [arXiv:2503.20314].
+
+Two sizes: the 1.3B (default, end-to-end trainable in the examples) and the
+14B used for cost-model calibration in the benchmarks.  Sequence lengths are
+variable — they come from the AdaptiveLoad bucketing pipeline.
+"""
+
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptimizerConfig
+
+
+def config() -> ModelConfig:  # 1.3B
+    return ModelConfig(
+        name="wan2.1-1.3b",
+        family="mmdit",
+        n_layers=30,
+        d_model=1536,
+        n_heads=12,
+        n_kv_heads=12,
+        head_dim=128,
+        d_ff=8960,
+        vocab=0,
+        text_len=512,
+        in_channels=16,
+    )
+
+
+def config_14b() -> ModelConfig:
+    return ModelConfig(
+        name="wan2.1-14b",
+        family="mmdit",
+        n_layers=40,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=40,
+        head_dim=128,
+        d_ff=13824,
+        vocab=0,
+        text_len=512,
+        in_channels=16,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="wan2.1-smoke",
+        family="mmdit",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=256,
+        vocab=0,
+        text_len=16,
+        in_channels=16,
+        dtype="float32",
+    )
+
+
+def optimizer() -> OptimizerConfig:
+    return OptimizerConfig(peak_lr=1e-4, schedule="constant", warmup=100)

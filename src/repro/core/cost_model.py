@@ -1,0 +1,133 @@
+"""Parameterized step-time cost model with automated fitting (paper §3.2).
+
+The paper replaces manual empirical tuning with a data-driven fit:
+
+    step_time_sync ≈ a + b * B * S**p
+
+``p`` is grid-searched over [1.6, 2.4] maximizing the coefficient of
+determination R²; ``a`` and ``b`` come from ordinary least squares at each
+candidate ``p``.  The compute budget is then back-derived from a target step
+latency: ``M_comp = (target_sync - a) / b``.
+
+Implemented in numpy only — this runs on the scheduler host, not on device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Sequence
+
+import numpy as np
+
+P_GRID_LO = 1.6
+P_GRID_HI = 2.4
+P_GRID_STEP = 0.02
+
+
+@dataclasses.dataclass(frozen=True)
+class BenchSample:
+    """One shape-benchmark observation: a (B, S) cell and its step time."""
+
+    batch_size: int
+    seq_len: int
+    step_time: float
+
+    def feature(self, p: float) -> float:
+        return self.batch_size * float(self.seq_len) ** p
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Fitted ``t = a + b * B * S^p`` model."""
+
+    a: float
+    b: float
+    p: float
+    r2: float
+    n_samples: int = 0
+
+    def predict(self, batch_size: float, seq_len: float) -> float:
+        return self.a + self.b * batch_size * float(seq_len) ** self.p
+
+    def m_comp_for_target(self, target_sync: float) -> float:
+        """Back-derive the compute budget M_comp = (target - a) / b."""
+        if target_sync <= self.a:
+            raise ValueError(
+                f"target_sync={target_sync} is below fixed overhead a={self.a}"
+            )
+        if self.b <= 0:
+            raise ValueError(f"degenerate slope b={self.b}")
+        return (target_sync - self.a) / self.b
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self))
+
+    @staticmethod
+    def from_json(s: str) -> "CostModel":
+        return CostModel(**json.loads(s))
+
+
+def _ols_r2(x: np.ndarray, y: np.ndarray) -> tuple[float, float, float]:
+    """OLS fit y = a + b x, returning (a, b, r2)."""
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    xm, ym = x.mean(), y.mean()
+    sxx = float(((x - xm) ** 2).sum())
+    if sxx == 0.0:
+        return float(ym), 0.0, 0.0
+    b = float(((x - xm) * (y - ym)).sum()) / sxx
+    a = float(ym - b * xm)
+    resid = y - (a + b * x)
+    sst = float(((y - ym) ** 2).sum())
+    r2 = 1.0 - float((resid**2).sum()) / sst if sst > 0 else 1.0
+    return a, b, r2
+
+
+def fit_cost_model(
+    samples: Sequence[BenchSample],
+    *,
+    p_lo: float = P_GRID_LO,
+    p_hi: float = P_GRID_HI,
+    p_step: float = P_GRID_STEP,
+) -> CostModel:
+    """Grid-search p maximizing R² of the OLS fit (paper §3.2)."""
+    if len(samples) < 3:
+        raise ValueError(f"need >= 3 samples to fit, got {len(samples)}")
+    y = np.array([s.step_time for s in samples], dtype=np.float64)
+    best: CostModel | None = None
+    p = p_lo
+    while p <= p_hi + 1e-9:
+        x = np.array([s.feature(p) for s in samples], dtype=np.float64)
+        a, b, r2 = _ols_r2(x, y)
+        if best is None or r2 > best.r2:
+            best = CostModel(a=a, b=b, p=round(p, 4), r2=r2, n_samples=len(samples))
+        p += p_step
+    assert best is not None
+    return best
+
+
+def pearson(x: Sequence[float], y: Sequence[float]) -> float:
+    xa = np.asarray(x, dtype=np.float64)
+    ya = np.asarray(y, dtype=np.float64)
+    xs = xa.std()
+    ys = ya.std()
+    if xs == 0 or ys == 0:
+        return 0.0
+    return float(((xa - xa.mean()) * (ya - ya.mean())).mean() / (xs * ys))
+
+
+def correlation_report(samples: Sequence[BenchSample], p: float) -> dict[str, float]:
+    """Paper's headline observation: corr(t, B*S) ≈ 0.35 vs corr(t, B*S^p) ≈ 0.92.
+
+    Returns both correlations for the given dataset so benchmarks can verify
+    the claim on our synthetic telemetry.
+    """
+    t = [s.step_time for s in samples]
+    tokens = [s.batch_size * s.seq_len for s in samples]
+    load = [s.feature(p) for s in samples]
+    return {
+        "corr_tokens": pearson(tokens, t),
+        "corr_load_p": pearson(load, t),
+        "p": p,
+    }

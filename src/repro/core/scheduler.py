@@ -1,0 +1,161 @@
+"""AdaptiveLoad closed-loop scheduler (paper §3.1-§3.2, Fig. 2).
+
+Ties the pieces together into the feedback loop the paper describes:
+
+    telemetry -> cost-model refit -> M_comp recalibration -> new buckets
+
+plus the operational concerns a real cluster adds:
+
+* **elastic scaling** — on a worker-count change the scheduler re-plans
+  (bucket batch sizes are per-device, so the plan survives resizes; the
+  global batch is re-derived),
+* **straggler mitigation** — persistent stragglers detected from telemetry
+  trigger either an alert or an automatic compute-budget derate so the
+  barrier stops latching on the sick worker,
+* **recalibration hysteresis** — the model is only swapped when the refit
+  improves R² or shifts p materially, avoiding plan thrash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .bucketing import Bucket, BucketingPolicy, DataShape
+from .cost_model import CostModel, fit_cost_model
+from .telemetry import TelemetryBuffer, WorkerStepRecord
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    target_sync: float  # desired step latency ceiling (s)
+    m_mem: float  # memory-bound token budget (tokens/device)
+    refit_interval: int = 100  # steps between cost-model refits
+    min_samples: int = 32
+    p_shift_tol: float = 0.05  # hysteresis on exponent changes
+    r2_floor: float = 0.80  # refuse models that explain the data poorly
+    straggler_threshold: float = 1.25
+    straggler_derate: float = 0.9  # M_comp multiplier while a straggler persists
+
+
+@dataclasses.dataclass
+class PlanUpdate:
+    step: int
+    reason: str
+    model: CostModel
+    m_comp: float
+    buckets: list[Bucket]
+
+
+class AdaptiveLoadScheduler:
+    """Closed-loop bucket planner."""
+
+    def __init__(
+        self,
+        config: SchedulerConfig,
+        shapes: Sequence[DataShape],
+        *,
+        initial_model: CostModel,
+        n_workers: int,
+    ):
+        self.config = config
+        self.shapes = list(shapes)
+        self.telemetry = TelemetryBuffer()
+        self.n_workers = n_workers
+        self.model = initial_model
+        self._derate = 1.0
+        self.updates: list[PlanUpdate] = []
+        self._steps_seen = 0
+        self.policy = self._policy_from_model(initial_model)
+        self.buckets = self.policy.make_buckets(self.shapes)
+
+    # -- planning -----------------------------------------------------------
+
+    def _policy_from_model(self, model: CostModel) -> BucketingPolicy:
+        m_comp = model.m_comp_for_target(self.config.target_sync) * self._derate
+        return BucketingPolicy(
+            m_mem=self.config.m_mem, m_comp=m_comp, p=model.p, mode="adaptive"
+        )
+
+    def _replan(self, step: int, model: CostModel, reason: str) -> None:
+        self.model = model
+        self.policy = self._policy_from_model(model)
+        self.buckets = self.policy.make_buckets(self.shapes)
+        self.updates.append(
+            PlanUpdate(step, reason, model, self.policy.m_comp, list(self.buckets))
+        )
+
+    # -- the loop -----------------------------------------------------------
+
+    def observe(self, records: Sequence[WorkerStepRecord]) -> None:
+        for r in records:
+            self.telemetry.add(r)
+        self._steps_seen += 1
+        if (
+            self._steps_seen % self.config.refit_interval == 0
+            and len(self.telemetry) >= self.config.min_samples
+        ):
+            self._maybe_refit()
+        self._check_stragglers()
+
+    def _maybe_refit(self) -> None:
+        samples = self.telemetry.bench_samples()
+        try:
+            new = fit_cost_model(samples)
+        except ValueError:
+            return
+        if new.r2 < self.config.r2_floor:
+            return  # telemetry too noisy to trust; keep the old plan
+        p_shift = abs(new.p - self.model.p)
+        if p_shift >= self.config.p_shift_tol or new.r2 > self.model.r2 + 0.01:
+            self._replan(
+                self._steps_seen,
+                new,
+                f"refit: p {self.model.p:.2f}->{new.p:.2f}, R2 {new.r2:.3f}",
+            )
+
+    def _check_stragglers(self) -> None:
+        stragglers = self.telemetry.straggler_workers(
+            threshold=self.config.straggler_threshold
+        )
+        if stragglers and self._derate == 1.0:
+            # Derate the compute budget so every bucket's load shrinks and the
+            # barrier no longer latches on the degraded worker.
+            self._derate = self.config.straggler_derate
+            self._replan(
+                self._steps_seen,
+                self.model,
+                f"straggler derate (workers {stragglers})",
+            )
+        elif not stragglers and self._derate != 1.0:
+            self._derate = 1.0
+            self._replan(self._steps_seen, self.model, "straggler cleared")
+
+    # -- elasticity ---------------------------------------------------------
+
+    def resize(self, n_workers: int) -> None:
+        """Elastic scale-up/down: per-device budgets are unchanged, but the
+        plan is re-emitted so the data pipeline can re-shard its stream."""
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        old = self.n_workers
+        self.n_workers = n_workers
+        self._replan(self._steps_seen, self.model, f"elastic resize {old}->{n_workers}")
+
+    # -- reporting ----------------------------------------------------------
+
+    def global_batch_tokens(self) -> int:
+        """Expected tokens/step across the cluster under the current plan."""
+        if not self.buckets:
+            return 0
+        per_bucket = sum(b.tokens for b in self.buckets) / len(self.buckets)
+        return int(per_bucket * self.n_workers)
+
+    def describe(self) -> str:
+        bn = self.telemetry.bottleneck()
+        return (
+            f"AdaptiveLoadScheduler(workers={self.n_workers}, "
+            f"p={self.model.p:.2f}, R2={self.model.r2:.3f}, "
+            f"M_comp={self.policy.m_comp:.3e}, M_mem={self.config.m_mem:.3e}, "
+            f"bottleneck={bn.verdict}, updates={len(self.updates)})"
+        )

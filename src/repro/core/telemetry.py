@@ -1,0 +1,127 @@
+"""Step telemetry + bottleneck analysis feeding the closed loop (paper §3.2).
+
+The paper: "it monitors the waiting time wait_sync of each GPU in real-time,
+identifies the primary bottleneck using bottleneck analysis tools, and
+dynamically recalibrates bucket configurations."
+
+``TelemetryBuffer`` accumulates per-step, per-worker records (compute time,
+data-wait, barrier-wait) and exposes:
+
+* cost-model training pairs ``(B, S, t)``,
+* per-worker health (persistent-straggler detection),
+* a bottleneck verdict: compute-imbalance vs data-starvation vs
+  communication-bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Sequence
+
+import numpy as np
+
+from .cost_model import BenchSample
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerStepRecord:
+    step: int
+    worker: int
+    batch_size: int
+    seq_len: int
+    compute_time: float
+    data_wait: float = 0.0
+    comm_time: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.compute_time + self.data_wait + self.comm_time
+
+
+@dataclasses.dataclass(frozen=True)
+class BottleneckReport:
+    verdict: str  # 'compute_imbalance' | 'data_starvation' | 'communication' | 'balanced'
+    mean_wait_sync: float
+    mean_data_wait: float
+    mean_comm: float
+    mean_compute: float
+    detail: str
+
+
+class TelemetryBuffer:
+    def __init__(self, capacity: int = 4096):
+        self._records: Deque[WorkerStepRecord] = deque(maxlen=capacity)
+        self._step_times: dict[int, list[float]] = {}
+
+    def add(self, rec: WorkerStepRecord) -> None:
+        self._records.append(rec)
+        self._step_times.setdefault(rec.step, []).append(rec.total)
+        # keep the per-step index bounded like the deque
+        if len(self._step_times) > 8192:
+            for k in sorted(self._step_times)[:1024]:
+                del self._step_times[k]
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def bench_samples(self) -> list[BenchSample]:
+        """(B, S) -> compute_time pairs for cost-model (re)fitting."""
+        return [
+            BenchSample(r.batch_size, r.seq_len, r.compute_time)
+            for r in self._records
+        ]
+
+    def wait_sync(self, step: int) -> list[float]:
+        ts = self._step_times.get(step, [])
+        if not ts:
+            return []
+        m = max(ts)
+        return [m - t for t in ts]
+
+    def straggler_workers(
+        self, *, window: int = 64, threshold: float = 1.25
+    ) -> list[int]:
+        """Workers whose median compute time exceeds threshold x cluster
+        median over the trailing window — persistent hardware stragglers,
+        as opposed to data-induced imbalance (which moves between workers)."""
+        recent = list(self._records)[-window * 16 :]
+        if not recent:
+            return []
+        by_worker: dict[int, list[float]] = {}
+        for r in recent:
+            by_worker.setdefault(r.worker, []).append(r.compute_time)
+        med_all = float(np.median([r.compute_time for r in recent]))
+        if med_all <= 0:
+            return []
+        return sorted(
+            w
+            for w, ts in by_worker.items()
+            if len(ts) >= 8 and float(np.median(ts)) > threshold * med_all
+        )
+
+    def bottleneck(self) -> BottleneckReport:
+        recs = list(self._records)
+        if not recs:
+            return BottleneckReport("balanced", 0, 0, 0, 0, "no data")
+        data_wait = float(np.mean([r.data_wait for r in recs]))
+        comm = float(np.mean([r.comm_time for r in recs]))
+        compute = float(np.mean([r.compute_time for r in recs]))
+        waits = []
+        for s in self._step_times.values():
+            m = max(s)
+            waits.extend(m - t for t in s)
+        wait_sync = float(np.mean(waits)) if waits else 0.0
+        total = max(compute + data_wait + comm, 1e-12)
+        if data_wait > 0.25 * total:
+            verdict, detail = "data_starvation", "data pipeline slower than step"
+        elif comm > 0.4 * total:
+            verdict, detail = "communication", "collectives dominate step time"
+        elif wait_sync > 0.15 * compute:
+            verdict, detail = (
+                "compute_imbalance",
+                "barrier wait >15% of compute: bucket loads are uneven",
+            )
+        else:
+            verdict, detail = "balanced", "no dominant bottleneck"
+        return BottleneckReport(verdict, wait_sync, data_wait, comm, compute, detail)

@@ -1,0 +1,113 @@
+"""Bucketed data pipeline: the paper's Fig. 2 dataloader.
+
+``BucketedLoader`` drives one data-parallel worker's stream:
+
+  shape corpus -> bucket draw -> (B_shape, S) microbatch -> accumulate to the
+  step budget (tokens for the baseline, fitted B*S^p load for AdaptiveLoad)
+
+A background prefetch thread keeps ``prefetch`` steps of synthetic batches
+ready so device steps never wait on the host (the paper's shape benchmark
+explicitly excludes data-loading jitter; this is how the real loop does
+too).  ``plan_update()`` lets the closed-loop scheduler swap bucket tables
+mid-training without draining the pipeline.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core.bucketing import Bucket
+
+
+class BucketedLoader:
+    def __init__(
+        self,
+        buckets: Sequence[Bucket],
+        weights: Sequence[float] | None,
+        make_batch: Callable[[np.random.Generator, Bucket], dict],
+        *,
+        budget: float,
+        budget_of: Callable[[Bucket], float],
+        seed: int = 0,
+        prefetch: int = 2,
+    ):
+        self._lock = threading.Lock()
+        self._buckets = list(buckets)
+        w = np.asarray(weights if weights is not None else [1.0] * len(buckets))
+        self._probs = w / w.sum()
+        self._make_batch = make_batch
+        self.budget = budget
+        self.budget_of = budget_of
+        self._rng = np.random.default_rng(seed)
+        self._q: queue.Queue = queue.Queue(maxsize=max(prefetch, 1))
+        self._stop = threading.Event()
+        self._error: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    # -- plan updates from the closed-loop scheduler -------------------------
+
+    def plan_update(
+        self,
+        buckets: Sequence[Bucket],
+        budget: float,
+        weights: Sequence[float] | None = None,
+    ) -> None:
+        with self._lock:
+            self._buckets = list(buckets)
+            w = np.asarray(weights if weights is not None else [1.0] * len(buckets))
+            self._probs = w / w.sum()
+            self.budget = budget
+
+    # -- producer -------------------------------------------------------------
+
+    def _draw_step(self) -> list[tuple[Bucket, dict]]:
+        with self._lock:
+            buckets, probs, budget = self._buckets, self._probs, self.budget
+        out = []
+        acc = 0.0
+        while acc < budget:
+            b = buckets[int(self._rng.choice(len(buckets), p=probs))]
+            out.append((b, self._make_batch(self._rng, b)))
+            acc += self.budget_of(b)
+        return out
+
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set():
+                step = self._draw_step()
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(step, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except Exception as e:  # noqa: BLE001 — surface to the consumer
+            self._error = e
+
+    # -- consumer ---------------------------------------------------------------
+
+    def __iter__(self) -> Iterator[list[tuple[Bucket, dict]]]:
+        return self
+
+    def __next__(self) -> list[tuple[Bucket, dict]]:
+        while True:
+            if self._error is not None:
+                raise RuntimeError("loader producer failed") from self._error
+            try:
+                return self._q.get(timeout=0.5)
+            except queue.Empty:
+                continue
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,63 @@
+"""Gradient compression for data-parallel sync (with error feedback).
+
+At 512+ chips the DP all-reduce of bf16 gradients is a first-order cost.
+Two wire formats:
+
+* ``bf16``  — cast-before-reduce (2x vs f32; the default everywhere here
+  since grads are already bf16);
+* ``int8``  — per-tensor absmax-scaled int8 with **error feedback** (EF):
+  the quantization residual is carried into the next step's gradient, which
+  keeps SGD/Adam convergence (Karimireddy et al., error-feedback SignSGD
+  line of work).  4x wire reduction vs f32, 2x vs bf16.
+
+These are pure functions over pytrees so they compose with any optimizer;
+the train loop applies compress->(all-reduce happens inside jit via the
+sharded grads)->decompress.  On a real mesh the int8 path pairs with a
+``shard_map`` psum over the data axis at int32 accumulation width.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def init_error_feedback(params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_int8(grads, ef_state):
+    """Returns (q_grads int8, scales, new_ef) with error feedback."""
+
+    def one(g, ef):
+        gf = g.astype(jnp.float32) + ef
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    out = jax.tree.map(one, grads, ef_state)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    ef = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, ef
+
+
+def decompress_int8(q_grads, scales, out_dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(out_dtype), q_grads, scales
+    )
+
+
+def compress_bf16(grads):
+    return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+
+
+def wire_bytes(grads, method: str) -> int:
+    """Bytes a DP all-reduce would move per worker for these grads."""
+    per = {"none": 4, "bf16": 2, "int8": 1}[method]
+    return sum(int(g.size) * per for g in jax.tree.leaves(grads))

@@ -1,0 +1,118 @@
+"""Fault tolerance: checkpoint cadence, failure detection, elastic recovery.
+
+At thousand-node scale the failure model is: some worker stops heartbeating
+(hardware loss), or degrades (persistent straggler — handled by the
+closed-loop scheduler's derate path in ``repro.core.scheduler``).  SPMD
+training cannot proceed with a hole in the mesh, so recovery is:
+
+    detect -> pick the largest usable worker count -> restore the latest
+    checkpoint under the new mesh -> replan buckets (elastic resize)
+
+``CheckpointCadence`` balances checkpoint cost against recomputation loss
+(cadence ~ sqrt(2*ckpt_cost*MTBF) — Young/Daly) and supports *emergency*
+saves when the monitor reports danger (e.g. rising straggler count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+from repro.checkpoint import store
+
+
+@dataclasses.dataclass
+class CheckpointCadence:
+    """Young/Daly-optimal periodic checkpointing."""
+
+    ckpt_cost_s: float  # measured time to write one checkpoint
+    mtbf_s: float  # cluster-level mean time between failures
+    min_interval_steps: int = 50
+
+    def interval_steps(self, step_time_s: float) -> int:
+        opt_s = math.sqrt(2.0 * self.ckpt_cost_s * self.mtbf_s)
+        return max(self.min_interval_steps, int(opt_s / max(step_time_s, 1e-6)))
+
+
+@dataclasses.dataclass
+class WorkerHealth:
+    last_heartbeat: float
+    failures: int = 0
+
+
+class HeartbeatMonitor:
+    """Tracks liveness; a worker silent for ``timeout_s`` is declared dead."""
+
+    def __init__(self, n_workers: int, timeout_s: float = 60.0):
+        now = time.time()
+        self.workers = {w: WorkerHealth(now) for w in range(n_workers)}
+        self.timeout_s = timeout_s
+
+    def heartbeat(self, worker: int, t: float | None = None) -> None:
+        self.workers.setdefault(worker, WorkerHealth(0.0)).last_heartbeat = (
+            t if t is not None else time.time()
+        )
+
+    def dead_workers(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.time()
+        return sorted(
+            w for w, h in self.workers.items()
+            if now - h.last_heartbeat > self.timeout_s
+        )
+
+    def alive(self, now: float | None = None) -> int:
+        return len(self.workers) - len(self.dead_workers(now))
+
+
+def recovery_plan(n_alive: int, *, model_parallel: int = 16) -> dict:
+    """Choose the new mesh after failures.
+
+    Keeps the model axis intact (TP/EP degree is architectural) and shrinks
+    the data axis to the largest power of two that the survivors can fill —
+    partial DP groups can't run SPMD programs.
+    """
+    if n_alive < model_parallel:
+        return {"feasible": False, "reason": "fewer survivors than one model group"}
+    dp = 1 << int(math.log2(n_alive // model_parallel))
+    return {
+        "feasible": True,
+        "data_parallel": dp,
+        "model_parallel": model_parallel,
+        "used_workers": dp * model_parallel,
+        "spare_workers": n_alive - dp * model_parallel,
+    }
+
+
+@dataclasses.dataclass
+class FaultTolerantRunner:
+    """Orchestration shim tying the pieces together for the train loop:
+    periodic saves, dead-worker detection, elastic replan callback."""
+
+    ckpt_dir: str
+    cadence: CheckpointCadence
+    monitor: HeartbeatMonitor
+    on_resize: Callable[[int], None] | None = None  # new dp size
+    _last_saved_step: int = -1
+
+    def maybe_checkpoint(self, state, step: int, step_time_s: float) -> bool:
+        interval = self.cadence.interval_steps(step_time_s)
+        if step - self._last_saved_step >= interval:
+            store.save(state, step, self.ckpt_dir)
+            self._last_saved_step = step
+            return True
+        return False
+
+    def emergency_checkpoint(self, state, step: int) -> None:
+        store.save(state, step, self.ckpt_dir)
+        self._last_saved_step = step
+
+    def check_failures(self, model_parallel: int = 16) -> dict | None:
+        dead = self.monitor.dead_workers()
+        if not dead:
+            return None
+        plan = recovery_plan(self.monitor.alive(), model_parallel=model_parallel)
+        if plan.get("feasible") and self.on_resize is not None:
+            self.on_resize(plan["data_parallel"])
+        return {"dead": dead, "plan": plan}

@@ -1,0 +1,118 @@
+"""Kernel dispatch layer.
+
+Models call these wrappers; a process-wide backend switch selects between
+
+* ``"ref"``    — fused ``jax.custom_vjp`` jnp implementations (CPU default;
+                 these already deliver the paper's *graph-level* fusion —
+                 minimal residuals — and are the numeric oracles), and
+* ``"pallas"`` — the TPU Pallas kernels (``interpret=True`` on CPU for
+                 validation; compiled on real TPU).
+
+Use ``set_backend("pallas")`` or the ``REPRO_KERNEL_BACKEND`` env var.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .fused_adaln.ref import (
+    activation_bytes_fused,
+    activation_bytes_naive,
+    adaln_fused_ref,
+    adaln_naive,
+    adaln_reference,
+)
+from .fused_rmsnorm.ref import (
+    gated_rms_norm_fused_ref,
+    gated_rms_norm_naive,
+    qk_norm_naive,
+    rms_norm_fused_ref,
+    rms_norm_naive,
+)
+
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "ref")
+# "naive" = discrete ops, no fused VJP (the paper's baseline);
+# "ref"   = fused custom_vjp jnp (graph-level fusion, CPU default);
+# "pallas"/"pallas_interpret" = the TPU kernels.
+_VALID = ("naive", "ref", "pallas", "pallas_interpret")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}, got {name!r}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+def _interpret() -> bool:
+    return _BACKEND == "pallas_interpret"
+
+
+def adaln_modulate(x, scale, shift, eps: float = 1e-6):
+    """Fused LayerNorm-Modulate (paper §3.3)."""
+    if _BACKEND.startswith("pallas"):
+        from .fused_adaln.ops import adaln_modulate as op
+
+        return op(x, scale, shift, eps=eps, interpret=_interpret())
+    if _BACKEND == "naive":
+        return adaln_naive(x, scale, shift, eps)
+    return adaln_fused_ref(x, scale, shift, eps)
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    if _BACKEND.startswith("pallas"):
+        from .fused_rmsnorm.ops import rms_norm as op
+
+        return op(x, w, eps=eps, interpret=_interpret())
+    if _BACKEND == "naive":
+        return rms_norm_naive(x, w, eps)
+    return rms_norm_fused_ref(x, w, eps)
+
+
+def gated_rms_norm(x, w, gate, eps: float = 1e-6):
+    """rmsnorm(x) * w * silu(gate) — paper's Gate+Norm fusion."""
+    if _BACKEND.startswith("pallas"):
+        from .fused_rmsnorm.ops import gated_rms_norm as op
+
+        return op(x, w, gate, eps=eps, interpret=_interpret())
+    if _BACKEND == "naive":
+        return gated_rms_norm_naive(x, w, gate, eps)
+    return gated_rms_norm_fused_ref(x, w, gate, eps)
+
+
+def qk_norm(q, k, wq, wk, eps: float = 1e-6):
+    """Joint per-head q/k RMSNorm — paper's QNorm+KNorm fusion."""
+    if _BACKEND.startswith("pallas"):
+        from .fused_rmsnorm.ops import rms_norm as op
+
+        return (
+            op(q, wq, eps=eps, interpret=_interpret()),
+            op(k, wk, eps=eps, interpret=_interpret()),
+        )
+    if _BACKEND == "naive":
+        return (rms_norm_naive(q, wq, eps), rms_norm_naive(k, wk, eps))
+    return qk_norm_naive(q, k, wq, wk, eps)
+
+
+__all__ = [
+    "set_backend",
+    "get_backend",
+    "adaln_modulate",
+    "rms_norm",
+    "gated_rms_norm",
+    "qk_norm",
+    "adaln_naive",
+    "adaln_reference",
+    "adaln_fused_ref",
+    "rms_norm_naive",
+    "rms_norm_fused_ref",
+    "gated_rms_norm_naive",
+    "gated_rms_norm_fused_ref",
+    "qk_norm_naive",
+    "activation_bytes_naive",
+    "activation_bytes_fused",
+]

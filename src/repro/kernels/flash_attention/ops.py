@@ -1,0 +1,35 @@
+"""jit'd wrapper: Pallas flash forward + reference VJP backward.
+
+Forward runs the Pallas kernel (causal tile skipping, VMEM-resident softmax
+state).  Backward recomputes attention through the jnp oracle's VJP — the
+standard recompute-in-backward pattern; a dedicated Pallas backward kernel is
+an optimization left on the table (documented in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash import flash_attention_fwd_pallas
+from .ref import attention_reference
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
+    return flash_attention_fwd_pallas(q, k, v, causal=causal, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, interpret):
+    out = flash_attention_fwd_pallas(q, k, v, causal=causal, interpret=interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_reference(q, k, v, causal=causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(
+    q,  # [B, Hq, Sq, dh]
+    k,  # [B, Hkv, Skv, dh]
+    v,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+):
+    b, hq, sq, dh = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else dh**-0.5
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale, kr.astype(jnp.float32)
+    )
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, skv), jnp.bool_), k=skv - sq)
+        s = jnp.where(mask[None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32)).astype(q.dtype)

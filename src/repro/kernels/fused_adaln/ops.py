@@ -1,0 +1,87 @@
+"""jit'd public wrapper for the fused AdaLN Pallas kernels (custom VJP)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .adaln import (
+    DEFAULT_D_BLOCK,
+    DEFAULT_DMOD_SEQ_BLOCK,
+    DEFAULT_SEQ_BLOCK,
+    adaln_bwd_dmod_pallas,
+    adaln_bwd_dx_pallas,
+    adaln_fwd_pallas,
+)
+from .ref import adaln_fused_ref
+
+
+def _pallas_supported(x, scale, shift) -> bool:
+    return (
+        x.ndim == 3
+        and scale.ndim == 2
+        and x.shape[-1] % 128 == 0
+        and x.shape[0] == scale.shape[0]
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _adaln_pallas(x, scale, shift, eps, interpret):
+    y, _, _ = adaln_fwd_pallas(
+        x, scale, shift, eps=eps, seq_block=_seq_block(x.shape[1]), interpret=interpret
+    )
+    return y
+
+
+def _seq_block(s: int) -> int:
+    sb = DEFAULT_SEQ_BLOCK
+    while s % sb != 0:
+        sb //= 2
+        if sb < 8:
+            return s
+    return sb
+
+
+def _fwd(x, scale, shift, eps, interpret):
+    y, mu, rstd = adaln_fwd_pallas(
+        x, scale, shift, eps=eps, seq_block=_seq_block(x.shape[1]), interpret=interpret
+    )
+    return y, (x, scale, mu, rstd)
+
+
+def _block_of(n: int, target: int) -> int:
+    blk = target
+    while n % blk != 0 and blk > 8:
+        blk //= 2
+    return blk if n % blk == 0 else n
+
+
+def _bwd(eps, interpret, res, dy):
+    x, scale, mu, rstd = res
+    s, d = x.shape[1], x.shape[2]
+    dx = adaln_bwd_dx_pallas(
+        dy, x, mu, rstd, scale, seq_block=_seq_block(s), interpret=interpret
+    )
+    dscale, dshift = adaln_bwd_dmod_pallas(
+        dy, x, mu, rstd,
+        d_block=_block_of(d, DEFAULT_D_BLOCK),
+        seq_block=_block_of(s, DEFAULT_DMOD_SEQ_BLOCK),
+        interpret=interpret,
+    )
+    return dx, dscale.astype(scale.dtype), dshift.astype(scale.dtype)
+
+
+_adaln_pallas.defvjp(_fwd, _bwd)
+
+
+def adaln_modulate(x, scale, shift, *, eps: float = 1e-6, interpret: bool = False):
+    """Fused LayerNorm + Modulate.  x: [B, S, D]; scale/shift: [B, D].
+
+    Falls back to the fused jnp reference when the shape is outside the
+    kernel's tiling constraints (non-128-multiple D).
+    """
+    if not _pallas_supported(x, scale, shift):
+        return adaln_fused_ref(x, scale, shift, eps)
+    return _adaln_pallas(x, scale, shift, eps, interpret)

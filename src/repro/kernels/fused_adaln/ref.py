@@ -1,0 +1,111 @@
+"""Pure-jnp oracle + fused-VJP reference for LayerNorm-Modulate (AdaLN).
+
+The operator (paper §3.3): given activations ``x [B, S, D]`` and per-sample
+modulation ``scale, shift [B, D]`` produced from the timestep embedding,
+
+    x_hat = (x - mean(x)) / sqrt(var(x) + eps)        (LayerNorm, no affine)
+    y     = x_hat * (1 + scale) + shift               (Modulate)
+
+Three implementations live here:
+
+* ``adaln_naive``       — discrete ops, the autograd graph the paper's
+                          baseline produces (each of mean/var/standardize/
+                          mul/add is its own node; JAX saves their outputs
+                          as residuals).
+* ``adaln_fused_ref``   — ``jax.custom_vjp`` with residuals exactly
+                          ``(x, scale, mean, rstd)``: the computational-
+                          graph collapse of paper §3.4.  Backward implements
+                          the *D-tile reduction* semantics: ∇shift/∇scale are
+                          sequence-dim reductions done in fp32.
+* ``adaln_reference``   — alias of ``adaln_naive`` used as the numeric
+                          oracle by kernel tests.
+
+Statistics are always computed in fp32 regardless of input dtype
+(paper §4.5 "float32 accumulation for critical gradient paths").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _norm_stats(x: jax.Array, eps: float) -> tuple[jax.Array, jax.Array]:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + eps)
+    return mean, rstd
+
+
+def adaln_naive(
+    x: jax.Array, scale: jax.Array, shift: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    """Discrete-op baseline (mean -> var -> standardize -> mul -> add)."""
+    mean, rstd = _norm_stats(x, eps)
+    x_hat = (x.astype(jnp.float32) - mean) * rstd
+    y = x_hat * (1.0 + scale.astype(jnp.float32)[..., None, :]) + shift.astype(
+        jnp.float32
+    )[..., None, :]
+    return y.astype(x.dtype)
+
+
+adaln_reference = adaln_naive
+
+
+def _adaln_fwd(x, scale, shift, eps):
+    mean, rstd = _norm_stats(x, eps)
+    x_hat = (x.astype(jnp.float32) - mean) * rstd
+    y = x_hat * (1.0 + scale.astype(jnp.float32)[..., None, :]) + shift.astype(
+        jnp.float32
+    )[..., None, :]
+    # graph collapse: only (x, scale, mean, rstd) survive as residuals —
+    # x_hat / y intermediates die inside the "kernel".
+    return y.astype(x.dtype), (x, scale, mean, rstd)
+
+
+def _adaln_bwd(eps, res, dy):
+    x, scale, mean, rstd = res
+    dyf = dy.astype(jnp.float32)
+    x_hat = (x.astype(jnp.float32) - mean) * rstd  # recomputed, not stored
+    # --- D-tile reduction semantics: reduce over the sequence axis with the
+    # feature axis minor/contiguous, accumulating in fp32 (paper §3.3).
+    d_shift = dyf.sum(axis=-2)
+    d_scale = (dyf * x_hat).sum(axis=-2)
+    # --- dx: standard LayerNorm backward through the modulation.
+    dxhat = dyf * (1.0 + scale.astype(jnp.float32)[..., None, :])
+    dx = (
+        dxhat
+        - dxhat.mean(axis=-1, keepdims=True)
+        - x_hat * (dxhat * x_hat).mean(axis=-1, keepdims=True)
+    ) * rstd
+    return (
+        dx.astype(x.dtype),
+        d_scale.astype(scale.dtype),
+        d_shift.astype(scale.dtype),
+    )
+
+
+adaln_fused_ref = jax.custom_vjp(adaln_naive, nondiff_argnums=(3,))
+adaln_fused_ref.defvjp(
+    lambda x, scale, shift, eps: _adaln_fwd(x, scale, shift, eps),
+    _adaln_bwd,
+)
+
+
+def activation_bytes_naive(batch: int, seq: int, d: int, itemsize: int = 2) -> int:
+    """Residual bytes the discrete-op graph keeps for backward.
+
+    Nodes: standardize keeps x, mean, rstd AND x_hat; modulate-mul keeps
+    x_hat (shared) and (1+scale); add keeps nothing new; the downstream
+    consumer keeps y.  Counting unique tensors: x, x_hat, y  (3 x N*D) plus
+    stats (2 x N) and scale (B*D).
+    """
+    n = batch * seq
+    return 3 * n * d * itemsize + 2 * n * 4 + batch * d * itemsize
+
+
+def activation_bytes_fused(batch: int, seq: int, d: int, itemsize: int = 2) -> int:
+    """Fused graph keeps x, y (2 x N*D), stats (2 x N fp32), scale (B*D)."""
+    n = batch * seq
+    return 2 * n * d * itemsize + 2 * n * 4 + batch * d * itemsize

@@ -1,0 +1,112 @@
+"""Pure-jnp oracle + fused-VJP reference for RMSNorm / Gated-RMSNorm / QK-Norm.
+
+Paper §4.4 fuses the LM-side "auxiliary" operators the same way it fuses
+AdaLN: Q-Norm + K-Norm and Gate + Norm.  These are the variants the
+assigned LM architectures need:
+
+* ``rms_norm``        — plain RMSNorm (LLaMA-family default).
+* ``gated_rms_norm``  — ``rmsnorm(x) * w * silu(gate)``: Mamba-2's norm
+                        before the out-projection and the Griffin/RG-LRU
+                        gate fusion (paper's Gate + Norm).
+* ``qk_norm``         — per-head RMSNorm applied jointly to q and k in one
+                        pass (paper's Q-Norm + K-Norm).
+
+Fused versions carry ``jax.custom_vjp`` with minimal residuals; stats are
+fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rms(x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    return jax.lax.rsqrt((xf * xf).mean(axis=-1, keepdims=True) + eps)
+
+
+def rms_norm_naive(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    rstd = _rms(x, eps)
+    return (x.astype(jnp.float32) * rstd * w.astype(jnp.float32)).astype(x.dtype)
+
+
+rms_norm_reference = rms_norm_naive
+
+
+def _rms_fwd(x, w, eps):
+    rstd = _rms(x, eps)
+    y = (x.astype(jnp.float32) * rstd * w.astype(jnp.float32)).astype(x.dtype)
+    return y, (x, w, rstd)
+
+
+def _rms_bwd(eps, res, dy):
+    x, w, rstd = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    x_hat = xf * rstd
+    dxhat = dyf * wf
+    # d/dx of x * rstd(x): rstd * (dxhat - x_hat * mean(dxhat * x_hat))
+    dx = rstd * (dxhat - x_hat * (dxhat * x_hat).mean(axis=-1, keepdims=True))
+    dw = (dyf * x_hat).reshape(-1, x.shape[-1]).sum(axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+rms_norm_fused_ref = jax.custom_vjp(rms_norm_naive, nondiff_argnums=(2,))
+rms_norm_fused_ref.defvjp(lambda x, w, eps: _rms_fwd(x, w, eps), _rms_bwd)
+
+
+def gated_rms_norm_naive(
+    x: jax.Array, w: jax.Array, gate: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    """rmsnorm(x) * w * silu(gate) — Mamba-2 / Griffin gate-norm fusion."""
+    rstd = _rms(x, eps)
+    g = jax.nn.silu(gate.astype(jnp.float32))
+    y = x.astype(jnp.float32) * rstd * w.astype(jnp.float32) * g
+    return y.astype(x.dtype)
+
+
+gated_rms_norm_reference = gated_rms_norm_naive
+
+
+def _grms_fwd(x, w, gate, eps):
+    rstd = _rms(x, eps)
+    return gated_rms_norm_naive(x, w, gate, eps), (x, w, gate, rstd)
+
+
+def _grms_bwd(eps, res, dy):
+    x, w, gate, rstd = res
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    gf = gate.astype(jnp.float32)
+    sig = jax.nn.sigmoid(gf)
+    silu = gf * sig
+    x_hat = xf * rstd
+    # y = x_hat * w * silu(g)
+    d_norm = dyf * silu  # grad into (x_hat * w)
+    dxhat = d_norm * wf
+    dx = rstd * (dxhat - x_hat * (dxhat * x_hat).mean(axis=-1, keepdims=True))
+    dw = (d_norm * x_hat).reshape(-1, x.shape[-1]).sum(axis=0)
+    dgate = dyf * x_hat * wf * (sig * (1.0 + gf * (1.0 - sig)))
+    return dx.astype(x.dtype), dw.astype(w.dtype), dgate.astype(gate.dtype)
+
+
+gated_rms_norm_fused_ref = jax.custom_vjp(gated_rms_norm_naive, nondiff_argnums=(3,))
+gated_rms_norm_fused_ref.defvjp(
+    lambda x, w, gate, eps: _grms_fwd(x, w, gate, eps), _grms_bwd
+)
+
+
+def qk_norm_naive(
+    q: jax.Array, k: jax.Array, wq: jax.Array, wk: jax.Array, eps: float = 1e-6
+) -> tuple[jax.Array, jax.Array]:
+    """Per-head RMSNorm of q and k in one fused pass (paper's QNorm+KNorm).
+
+    q: [..., Hq, dh], k: [..., Hk, dh]; wq/wk: [dh].
+    """
+    return rms_norm_fused_ref(q, wq, eps), rms_norm_fused_ref(k, wk, eps)
+
+
+qk_norm_reference = qk_norm_naive

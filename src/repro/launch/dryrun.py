@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes and record memory/cost/collective analysis.
+
+MUST be run as its own process (device count locks at first jax init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single   # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all                 # sweep
+
+Results accumulate in benchmarks/results/dryrun.json (resumable).
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs.registry import (
+    SHAPES,
+    arch_ids,
+    cell_supported,
+    get_config,
+    get_optimizer,
+)
+from repro.distributed.sharding import make_policy
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hlo_stats import collective_stats
+from repro.launch.specs import decode_specs, prefill_specs, train_specs
+from repro.train.steps import (
+    make_decode_step,
+    make_denoise_step,
+    make_prefill_step,
+    make_train_step,
+)
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun.json"
+
+
+def probe_config(cfg, k: int):
+    """Shallow probe variant: len(lead) + k * len(pattern) layers, scans
+    unrolled at lowering — used for the two-point linear extrapolation of
+    per-layer roofline terms (see benchmarks/roofline.py: XLA's
+    cost_analysis counts while-loop bodies once, so scanned full-depth
+    programs under-report; probes are unrolled and exact)."""
+    import dataclasses
+
+    lead, pat, n_rep, tail = cfg.superblocks()
+    n_layers = len(lead) + k * max(len(pat), 1)
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, probe_k: int = 0,
+    resid_mode: str = "feature",
+) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    unroll = probe_k > 0
+    if unroll:
+        cfg = probe_config(cfg, probe_k)
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    policy = make_policy(mesh, cfg, resid_mode=resid_mode)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            args, in_sh, out_sh, opt = train_specs(cfg, shape, policy,
+                                                   get_optimizer(arch))
+            fn = make_train_step(cfg, opt, policy, unroll=unroll)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        elif shape.kind == "prefill":
+            args, in_sh, out_sh = prefill_specs(cfg, shape, policy)
+            fn = make_prefill_step(cfg, cache_cap=shape.seq_len, policy=policy,
+                                   unroll=unroll)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        else:  # decode
+            args, in_sh, out_sh = decode_specs(cfg, shape, policy)
+            fn = make_decode_step(cfg, policy, unroll=unroll)
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = collective_stats(text)
+
+    n_chips = mesh.devices.size
+    return {
+        "status": "ok",
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "probe_k": probe_k,
+        "n_layers": cfg.n_layers,
+        "n_chips": int(n_chips),
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        },
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "tp_heads": policy.tp_heads,
+    }
+
+
+def load_results() -> dict:
+    if RESULTS.exists():
+        return json.loads(RESULTS.read_text())
+    return {}
+
+
+def save_results(res: dict) -> None:
+    RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    RESULTS.write_text(json.dumps(res, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="", help="optional tag for perf experiments")
+    ap.add_argument("--probe", type=int, default=0,
+                    help="probe depth multiplier k (unrolled shallow compile)")
+    ap.add_argument("--probe-sweep", action="store_true",
+                    help="run k=2 and k=4 probes for every cell (single mesh)")
+    ap.add_argument("--resid-mode", default="seq",
+                    choices=["feature", "replicated", "seq"])
+    args = ap.parse_args()
+
+    res = load_results()
+    if args.probe_sweep:
+        cells = [
+            (a, s, "single", k)
+            for a in arch_ids()
+            for s in SHAPES
+            for k in (2, 4)
+        ]
+    elif args.all:
+        cells = [
+            (a, s, m, args.probe)
+            for a in arch_ids()
+            for s in SHAPES
+            for m in ("single", "multipod")
+        ]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh, args.probe)]
+
+    for arch, shape_name, mesh_kind, probe_k in cells:
+        key = f"{arch}|{shape_name}|{mesh_kind}"
+        if probe_k:
+            key += f"|probe{probe_k}"
+        if args.variant:
+            key += f"|{args.variant}"
+        if key in res and res[key].get("status") in ("ok", "skipped") and not args.force:
+            print(f"[skip-cached] {key}")
+            continue
+        print(f"[run] {key} ...", flush=True)
+        try:
+            out = run_cell(arch, shape_name, mesh_kind, probe_k,
+                           resid_mode=args.resid_mode)
+        except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+            out = {
+                "status": "error",
+                "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:],
+            }
+        res[key] = out
+        save_results(res)
+        stat = out["status"]
+        if stat == "ok":
+            mem = out["memory"]
+            print(
+                f"  ok: compile {out['compile_s']}s  flops/dev "
+                f"{out['flops']:.3e}  temp/dev {mem['temp_bytes']/2**30:.2f}GiB  "
+                f"coll/dev {out['collectives']['total_bytes']/2**30:.3f}GiB"
+            )
+        elif stat == "skipped":
+            print(f"  skipped: {out['reason']}")
+        else:
+            print(f"  ERROR: {out['error']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Compiled-HLO statistics: collective byte accounting for the roofline.
+
+``cost_analysis()`` has no collective term, so we parse the compiled module
+text and sum the **output-shape bytes** of every collective op per device
+(convention documented in EXPERIMENTS.md: for all-reduce out==in; for
+all-gather the output counts the fully gathered bytes a device receives; for
+reduce-scatter the output counts the reduced shard it keeps).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %all-gather.3 = bf16[16,128]{1,0} all-gather(...)
+#       ROOT %t = (f32[2,4]{...}, bf16[8]{...}) all-reduce(...)
+_INSTR = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)[-a-z]*\("
+)
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(stext: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(stext):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-op byte totals (per device, output-shape convention)."""
+    bytes_by_op: dict[str, int] = defaultdict(int)
+    count_by_op: dict[str, int] = defaultdict(int)
+    for shape_text, opname in _INSTR.findall(hlo_text):
+        bytes_by_op[opname] += _shape_bytes(shape_text)
+        count_by_op[opname] += 1
+    return {
+        "bytes_by_op": dict(bytes_by_op),
+        "count_by_op": dict(count_by_op),
+        "total_bytes": int(sum(bytes_by_op.values())),
+        "total_count": int(sum(count_by_op.values())),
+    }

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state.  The dry-run sets XLA_FLAGS before any jax import to get 512
+host placeholder devices; real launches get the same topology from the TPU
+runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke work (keeps the same axis names)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+Everything here is shape-only: weak-type-correct, shardable, no device
+allocation.  ``input_specs`` returns (args, in_shardings, out_shardings)
+matching the step function the shape's kind selects.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ShapeSpec, get_optimizer
+from repro.distributed.sharding import ShardingPolicy, sanitize_spec
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptimizerConfig
+from repro.train.steps import state_shapes
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(policy: ShardingPolicy, shape, spec):
+    return NamedSharding(policy.mesh, sanitize_spec(shape, spec, policy.mesh))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    """Training-batch ShapeDtypeStructs + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    bx = tuple(policy.batch_axes)
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "mmdit":
+        batch = {
+            "latents": _sds((b, s, cfg.in_channels * 4), dt),
+            "text": _sds((b, cfg.text_len, 4096), dt),
+        }
+        sh = {
+            "latents": _named(policy, (b, s, cfg.in_channels * 4), P(bx, None, None)),
+            "text": _named(policy, (b, cfg.text_len, 4096), P(bx, None, None)),
+        }
+        return batch, sh
+    batch = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    sh = {
+        "tokens": _named(policy, (b, s), P(bx, None)),
+        "labels": _named(policy, (b, s), P(bx, None)),
+    }
+    if cfg.family == "vlm":
+        mshape = (b, cfg.n_image_tokens, cfg.d_model)
+        batch["memory"] = _sds(mshape, dt)
+        sh["memory"] = _named(policy, mshape, P(bx, None, None))
+    return batch, sh
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy,
+                opt: OptimizerConfig | None = None):
+    opt = opt or OptimizerConfig(state_dtype=cfg.opt_state_dtype)
+    st = state_shapes(cfg, opt)
+    st_sh = {
+        "params": policy.param_sharding(st["params"]),
+        "opt": {
+            "m": policy.param_sharding(st["opt"]["m"]),
+            "v": policy.param_sharding(st["opt"]["v"]),
+        },
+        "step": policy.scalar_sharding(),
+    }
+    batch, batch_sh = batch_specs(cfg, shape, policy)
+    rng = _sds((2,), jnp.uint32)
+    rng_sh = policy.scalar_sharding()
+    args = (st, batch, rng)
+    in_sh = (st_sh, batch_sh, rng_sh)
+    out_sh = (st_sh, None)  # metrics: let SPMD choose (scalars)
+    return args, in_sh, out_sh, opt
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    b, s = shape.global_batch, shape.seq_len
+    bx = tuple(policy.batch_axes)
+    params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = policy.param_sharding(params)
+    tokens = _sds((b, s), jnp.int32)
+    tok_sh = _named(policy, (b, s), P(bx, None))
+    args = [params, tokens]
+    in_sh = [p_sh, tok_sh]
+    if cfg.family == "vlm":
+        mshape = (b, cfg.n_image_tokens, cfg.d_model)
+        args.append(_sds(mshape, jnp.dtype(cfg.dtype)))
+        in_sh.append(_named(policy, mshape, P(bx, None, None)))
+    return tuple(args), tuple(in_sh), None
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec, policy: ShardingPolicy):
+    b, cap = shape.global_batch, shape.seq_len
+    bx = tuple(policy.batch_axes)
+    params = jax.eval_shape(lambda: T.init_params(jax.random.PRNGKey(0), cfg))
+    p_sh = policy.param_sharding(params)
+    caches = jax.eval_shape(lambda: T.init_cache(cfg, b, cap))
+    c_sh = policy.cache_sharding(caches)
+    token = _sds((b, 1), jnp.int32)
+    tok_sh = _named(policy, (b, 1), P(bx, None))
+    pos = _sds((), jnp.int32)
+    args = (params, caches, token, pos)
+    in_sh = (p_sh, c_sh, tok_sh, policy.scalar_sharding())
+    out_sh = (None, c_sh)  # keep caches pinned in place across steps
+    return args, in_sh, out_sh

@@ -1,0 +1,128 @@
+"""Training launcher.
+
+CPU-scale real training on reduced configs (the example path), or the full
+production config when pointed at a real mesh:
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --smoke --steps 50 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_config, get_optimizer, get_smoke_config
+from repro.core import (
+    AdaptiveLoadScheduler,
+    AnalyticDeviceModel,
+    BenchSample,
+    ModelDims,
+    SchedulerConfig,
+    fit_cost_model,
+)
+from repro.core.bucketing import BucketingPolicy, DataShape
+from repro.data.pipeline import BucketedLoader
+from repro.data.synthetic import make_diffusion_batch, make_lm_batch
+from repro.distributed.fault_tolerance import (
+    CheckpointCadence,
+    FaultTolerantRunner,
+    HeartbeatMonitor,
+)
+from repro.optim.adamw import OptimizerConfig
+from repro.train.loop import Trainer
+from repro.train.steps import init_state
+from repro.checkpoint import store
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="bucketed AdaptiveLoad data (variable shapes)")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    opt = get_optimizer(args.arch)
+    opt = OptimizerConfig(
+        peak_lr=opt.peak_lr, schedule="constant", warmup=0,
+        total_steps=args.steps, state_dtype=cfg.opt_state_dtype,
+    )
+
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    start = 0
+    if args.resume:
+        latest = store.latest_step(args.ckpt_dir)
+        if latest is not None:
+            state = store.restore(args.ckpt_dir, state)
+            start = latest
+            print(f"resumed from step {latest}")
+
+    rng = np.random.default_rng(0)
+
+    if args.adaptive:
+        # variable-shape bucketed stream with the dual constraint
+        shapes = [DataShape(1, 64, 64, 0, ), DataShape(9, 64, 64, 0)]
+        shapes = [DataShape(1, 256, 256, 16), DataShape(9, 256, 256, 16),
+                  DataShape(17, 256, 256, 16)]
+        policy = BucketingPolicy(m_mem=args.batch * 1024, m_comp=2.0e7, p=2.0)
+        buckets = policy.make_buckets(shapes)
+    else:
+        buckets = None
+
+    def make_batch(rng_np, bucket):
+        key = jax.random.PRNGKey(int(rng_np.integers(2**31)))
+        if cfg.family == "mmdit":
+            b = bucket.batch_size if bucket else args.batch
+            s = bucket.seq_len if bucket else args.seq
+            return make_diffusion_batch(key, b, s, cfg)
+        b = bucket.batch_size if bucket else args.batch
+        s = bucket.seq_len if bucket else args.seq
+        return make_lm_batch(key, b, s, cfg.vocab, cfg)
+
+    if buckets is not None:
+        loader = BucketedLoader(
+            buckets, None, make_batch,
+            budget=float(args.batch * args.seq),
+            budget_of=lambda b: float(b.tokens),
+        )
+        data_iter = iter(loader)
+    else:
+        class _Fixed:
+            def __iter__(self):
+                return self
+
+            def __next__(self):
+                class _B:  # fixed-shape pseudo-bucket
+                    batch_size, seq_len = args.batch, args.seq
+                    tokens = args.batch * args.seq
+                return [(_B(), make_batch(rng, None))]
+
+        data_iter = iter(_Fixed())
+
+    ft = FaultTolerantRunner(
+        ckpt_dir=args.ckpt_dir,
+        cadence=CheckpointCadence(ckpt_cost_s=0.5, mtbf_s=3600.0, min_interval_steps=10),
+        monitor=HeartbeatMonitor(n_workers=1, timeout_s=1e9),
+    )
+    trainer = Trainer(cfg, opt, ft=ft)
+    state, hist = trainer.run(
+        state, data_iter, args.steps, rng=jax.random.PRNGKey(1), log_every=10
+    )
+    print(
+        f"done: {args.steps} steps, final loss {hist.losses[-1]:.4f}, "
+        f"throughput {hist.throughput:,.0f} tok/s, events={hist.events}"
+    )
+    store.save(state, start + args.steps, args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

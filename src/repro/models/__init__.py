@@ -1,0 +1,17 @@
+"""Model zoo: every assigned architecture family + the paper's MMDiT."""
+
+from .config import ModelConfig, MoEConfig, SSMConfig
+from . import attention, layers, mmdit, moe, rglru, ssm, transformer
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "attention",
+    "layers",
+    "mmdit",
+    "moe",
+    "rglru",
+    "ssm",
+    "transformer",
+]

@@ -1,0 +1,168 @@
+"""Model configuration schema shared by the whole framework.
+
+One ``ModelConfig`` describes any of the assigned architectures; the layer
+``pattern`` (cycled to cover ``n_layers``) selects the block kinds:
+
+  'attn'   global causal self-attention + gated MLP   (dense LMs)
+  'moe'    global causal self-attention + routed MoE  (llama4, kimi)
+  'local'  windowed causal self-attention + gated MLP (recurrentgemma)
+  'rglru'  RG-LRU recurrent mixer + gated MLP         (recurrentgemma)
+  'ssm'    Mamba-2 SSD mixer (no MLP)                 (mamba2)
+  'cross'  cross-attention to encoder memory + MLP    (llama3.2-vision)
+
+The MMDiT (paper's own Wan-2.1-like arch) uses ``family='mmdit'`` and is
+assembled in ``models/mmdit.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    first_dense: int = 0  # leading dense layers (kimi-k2: 1)
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio | mmdit
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: tuple[str, ...] = ("attn",)
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-6
+    qkv_bias: bool = False  # qwen2.5
+    qk_norm: bool = False
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = True
+    dtype: str = "bfloat16"
+    local_window: int = 2048
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    # vlm: length of the precomputed patch-embedding stub fed by input_specs()
+    n_image_tokens: int = 0
+    # diffusion (mmdit): text conditioning length; latent patch channels
+    text_len: int = 0
+    in_channels: int = 16
+    # optimizer-state dtype override ('float32' default; kimi uses bfloat16)
+    opt_state_dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.n_heads % max(self.n_kv_heads, 1) != 0 and self.n_kv_heads:
+            raise ValueError(f"{self.name}: n_heads must be divisible by n_kv_heads")
+        if self.family == "moe" and self.moe is None:
+            raise ValueError(f"{self.name}: moe family needs MoEConfig")
+        if "ssm" in self.pattern and self.ssm is None:
+            raise ValueError(f"{self.name}: ssm blocks need SSMConfig")
+
+    # -- layer plan -----------------------------------------------------
+
+    def layer_kinds(self) -> list[str]:
+        """The concrete per-layer block kinds, pattern cycled over n_layers,
+        with MoE ``first_dense`` leading layers downgraded to dense attn."""
+        kinds = [self.pattern[i % len(self.pattern)] for i in range(self.n_layers)]
+        if self.moe is not None and self.moe.first_dense > 0:
+            for i in range(min(self.moe.first_dense, self.n_layers)):
+                if kinds[i] == "moe":
+                    kinds[i] = "attn"
+        return kinds
+
+    def superblocks(self) -> tuple[list[str], list[str], int, list[str]]:
+        """Split the layer plan into (leading, pattern, n_repeats, trailing)
+        so the forward pass can ``lax.scan`` over identical superblocks:
+
+            leading (unrolled) -> scan(n_repeats x pattern) -> trailing (unrolled)
+
+        Leading layers are those that deviate from the cycle (e.g. kimi's
+        first dense layer); trailing layers are a partial final cycle.
+        """
+        kinds = self.layer_kinds()
+        pat = list(self.pattern)
+        # leading layers that deviate from the cycle (e.g. kimi first dense)
+        lead = 0
+        while lead < len(kinds) and kinds[lead] != pat[lead % len(pat)]:
+            lead += 1
+        body = kinds[lead:]
+        n_rep = len(body) // len(pat)
+        # verify the body really is the cycled pattern
+        for i, k in enumerate(body[: n_rep * len(pat)]):
+            if k != pat[i % len(pat)]:
+                # fall back: treat everything as unrolled (no scan)
+                return kinds, [], 0, []
+        trailing = body[n_rep * len(pat) :]
+        return kinds[:lead], pat, n_rep, trailing
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if no block kind needs a full O(S^2)/O(S)-KV global attention
+        — the archs eligible for the long_500k shape."""
+        quadratic = {"attn", "moe", "cross"}
+        return not any(k in quadratic for k in self.layer_kinds())
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm.expand * self.d_model if self.ssm else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm.head_dim if self.ssm else 0
+
+    # -- parameter counting (for roofline MODEL_FLOPS = 6·N·D) ----------
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or active-per-token) parameter count, embeddings included
+        once (tied)."""
+        d = self.d_model
+        n = 0
+        for kind in self.layer_kinds():
+            if kind in ("attn", "moe", "local", "cross"):
+                n += d * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+                n += self.n_heads * self.head_dim * d
+                if self.qkv_bias:
+                    n += (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+            if kind in ("attn", "local", "cross"):
+                n += 3 * d * self.d_ff
+            if kind == "moe":
+                assert self.moe is not None
+                e = self.moe.top_k if active_only else self.moe.n_experts
+                n += 3 * d * self.moe.d_expert * (e + self.moe.n_shared)
+                n += d * self.moe.n_experts  # router
+            if kind == "rglru":
+                d_rnn = d  # Griffin uses d_rnn ~= d_model
+                n += 2 * d * d_rnn + 2 * d_rnn  # in/out proj + gates' diag
+                n += 2 * d_rnn * d_rnn  # gate projections
+                n += 3 * d * self.d_ff
+            if kind == "ssm":
+                assert self.ssm is not None
+                di = self.d_inner
+                n += d * (2 * di + 2 * self.ssm.d_state + self.ssm_heads)
+                n += di * d  # out proj
+                n += self.ssm.conv_width * (di + 2 * self.ssm.d_state)
+            n += 2 * d  # norms
+        n += self.vocab * d  # embeddings (tied)
+        if not self.tie_embeddings:
+            n += self.vocab * d
+        return n

@@ -1,0 +1,141 @@
+"""Base layers: norms (routed through the fused-kernel dispatch), RoPE,
+gated MLP, parameter initializers.
+
+All layers are pure functions over parameter pytrees (no framework dep).
+Parameter dicts use short stable keys so sharding rules can match on path.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as K
+
+Params = dict[str, Any]
+
+
+# -- initializers ------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    s = scale if scale is not None else d_in**-0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def norm_params(d: int, kind: str, dtype=jnp.float32) -> Params:
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(p: Params, x: jax.Array, kind: str, eps: float) -> jax.Array:
+    if kind == "rmsnorm":
+        return K.rms_norm(x, p["w"], eps=eps)
+    if kind == "layernorm":
+        xf = x.astype(jnp.float32)
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["w"] + p["b"]).astype(x.dtype)
+    raise ValueError(kind)
+
+
+# -- rotary position embeddings ---------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float
+) -> jax.Array:
+    """x: [B, S, H, dh]; positions: [B, S] or [S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, dh/2]
+    if ang.ndim == 2:  # [S, dh/2] -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[..., None, :]  # [B, S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- gated MLP (SwiGLU family) ------------------------------------------------
+
+
+def mlp_params(key, d: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, d, d_ff, dtype),
+        "w3": dense_init(k2, d, d_ff, dtype),
+        "w2": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+# -- LM head / chunked loss ----------------------------------------------------
+
+
+def chunked_softmax_xent(
+    x: jax.Array,
+    emb: jax.Array,
+    labels: jax.Array,
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; per chunk computes fp32 logits, logsumexp and
+    the label logit.  Essential for the big-vocab archs (kimi 163k x 1M
+    tokens would otherwise need hundreds of TB of logits).
+    Returns the mean loss over all tokens.
+    """
+    b, s, d = x.shape
+    n_chunks = s // chunk
+    assert n_chunks * chunk == s, f"seq {s} not divisible by chunk {chunk}"
+    xc = x.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)  # [C, B, c, D]
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # recompute chunk logits in backward: never stores [C,B,c,V]
+    def chunk_loss(xi, li):
+        logits = jnp.einsum(
+            "bcd,vd->bcv", xi, emb, preferred_element_type=jnp.float32
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return (lse - gold).sum()
+
+    def body(acc, xs):
+        xi, li = xs
+        return acc + chunk_loss(xi, li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (b * s)
+
+
+def last_token_logits(x_last: jax.Array, emb: jax.Array) -> jax.Array:
+    """[B, D] x [V, D] -> [B, V] fp32 logits (decode/prefill head)."""
+    return (x_last @ emb.T).astype(jnp.float32)

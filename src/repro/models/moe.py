@@ -1,0 +1,192 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Expert-parallel friendly formulation: tokens are split into ``n_groups``
+dispatch groups (== the data-parallel axis size on the production mesh, 1 in
+CPU tests).  Each group independently ranks its token->expert assignments
+and scatters into its own capacity slice of the expert buffers, so the
+global buffer is cleanly sharded:
+
+    buffer [E, G, C, d]  ~  P('model'(EP over E), 'data'(over G), None, None)
+
+XLA SPMD then lowers the token->expert resharding to all-to-all style
+collectives.  No [T, E, C] one-hot dispatch tensors are ever built (the
+GShard pattern would be ~10^13 elements for kimi-k2).
+
+Dropped tokens (beyond capacity) contribute zero, matching capacity-factor
+MoE semantics (GShard/Switch).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import MoEConfig
+from .layers import dense_init
+
+Params = dict[str, Any]
+
+
+def moe_params(key, d: int, cfg: MoEConfig, dtype) -> Params:
+    ks = jax.random.split(key, 8)
+    e, f = cfg.n_experts, cfg.d_expert
+    p: Params = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * d**-0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * d**-0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * f**-0.5).astype(dtype),
+    }
+    if cfg.n_shared > 0:
+        fs = cfg.n_shared * f
+        p["shared"] = {
+            "w1": dense_init(ks[4], d, fs, dtype),
+            "w3": dense_init(ks[5], d, fs, dtype),
+            "w2": dense_init(ks[6], fs, d, dtype),
+        }
+    return p
+
+
+def _group_rank(sorted_e: jax.Array) -> jax.Array:
+    """Rank of each element within its (sorted) expert group.
+
+    sorted_e: [N] sorted expert ids.  rank[i] = i - first_index(group of i).
+    """
+    n = sorted_e.shape[0]
+    idx = jnp.arange(n)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_e[1:] != sorted_e[:-1]]
+    )
+    start_idx = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    return idx - start_idx
+
+
+def _routing_indices(logits, cfg: MoEConfig, capacity: int):
+    """logits: [T, E] (one group).  Pure index/weight computation — no
+    feature-dim tensors, so it is safe to vmap over groups."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)  # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_e.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_e, stable=True)
+    ranks_sorted = _group_rank(flat_e[order])
+    ranks = jnp.zeros_like(flat_e).at[order].set(ranks_sorted)  # [T*k]
+
+    keep = ranks < capacity
+    slot = flat_e * capacity + jnp.minimum(ranks, capacity - 1)  # [T*k]
+    return slot, keep, top_p, probs, top_e
+
+
+def aux_load_balance_loss(probs: jax.Array, top_e: jax.Array, n_experts: int):
+    """Switch-style load-balancing loss: E * sum_e f_e * P_e."""
+    f = jnp.zeros((n_experts,), jnp.float32).at[top_e.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(f.sum(), 1.0)
+    p = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def apply_moe(
+    p: Params,
+    x: jax.Array,
+    cfg: MoEConfig,
+    *,
+    n_groups: int = 1,
+    policy=None,
+    no_drop: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    ``no_drop=True`` sizes capacity so no token can ever be dropped — used
+    by the decode path, where batches are tiny and capacity-dropping would
+    corrupt generation (serving MoE must be lossless)."""
+    b, s, d = x.shape
+    t_total = b * s
+    assert t_total % n_groups == 0, f"{t_total} tokens not divisible into {n_groups} groups"
+    t_loc = t_total // n_groups
+    xg = x.reshape(n_groups, t_loc, d)
+    if policy is not None:
+        xg = policy.constrain(xg, "moe_tokens")
+
+    # bf16 einsum then upcast: keeps the backward cotangent chain in bf16
+    # (preferred_element_type=f32 here would promote every upstream grad).
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype)).astype(
+        jnp.float32
+    )
+    capacity = max(
+        cfg.top_k,
+        int(t_loc * cfg.top_k / cfg.n_experts * cfg.capacity_factor + 0.999),
+    )
+    if no_drop:
+        capacity = t_loc * cfg.top_k  # worst case: every token on one expert
+
+    slot, keep, top_p, probs, top_e = jax.vmap(
+        lambda li: _routing_indices(li, cfg, capacity)
+    )(logits)  # slot/keep: [G, T*k]
+
+    e, c, k = cfg.n_experts, capacity, cfg.top_k
+    tk = t_loc * k
+
+    # ---- dispatch: gather tokens (d stays model-sharded), scatter into the
+    # [G, E*C, d] buffers.  All gathers/scatters are *batched over G with
+    # group-local indices* — SPMD partitions batch dims of gather/scatter
+    # trivially, so the token stream never gets all-gathered (a flat global-
+    # index formulation forces a full f32 replication of [G*Tk, d]; see
+    # EXPERIMENTS.md §Perf kimi iteration 2).
+    tok = jnp.repeat(jnp.arange(t_loc), k)  # [Tk], same for every group
+    contrib = jnp.where(keep, 1.0, 0.0).astype(x.dtype)  # [G, Tk]
+
+    gathered = jnp.take_along_axis(
+        xg, jnp.broadcast_to(tok[None, :, None], (n_groups, tk, 1)), axis=1
+    )  # [G, Tk, d]
+    if policy is not None:
+        gathered = policy.constrain(gathered, "moe_gathered")
+
+    def scatter_one(buf0, slots, updates):
+        return buf0.at[slots].add(
+            updates, mode="promise_in_bounds", unique_indices=True
+        )
+
+    buf = jax.vmap(scatter_one)(
+        jnp.zeros((n_groups, e * c, d), x.dtype),
+        slot,
+        gathered * contrib[..., None],
+    )
+    buf = buf.reshape(n_groups, e, c, d)
+    if policy is not None:
+        buf = policy.constrain(buf, "moe_buffer")
+
+    # ---- expert matmuls over all groups at once: [E, G*C, d] x [E, d, f]
+    bufe = buf.swapaxes(0, 1).reshape(e, n_groups * c, d)
+    if policy is not None:
+        bufe = policy.constrain(bufe, "moe_expert_tokens")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", bufe, p["w1"])) * jnp.einsum(
+        "ecd,edf->ecf", bufe, p["w3"]
+    )
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    out_e = out_e.reshape(e, n_groups, c, d).swapaxes(0, 1)  # [G, E, C, d]
+    if policy is not None:
+        out_e = policy.constrain(out_e, "moe_buffer")
+
+    # ---- combine: batched gather of expert outputs back to tokens, weight,
+    # reduce over the k assignments in bf16 (an f32 reduction here would
+    # materialize an f32 [G, T, k, d]; see EXPERIMENTS.md §Perf).
+    out_flat = out_e.reshape(n_groups, e * c, d)
+    back = jnp.take_along_axis(out_flat, slot[..., None], axis=1)  # [G, Tk, d]
+    if policy is not None:
+        back = policy.constrain(back, "moe_gathered")
+    w = (top_p.reshape(n_groups, tk) * keep).astype(x.dtype)  # [G, Tk]
+    z = back * w[..., None]
+    y = z.reshape(n_groups, t_loc, k, d).sum(axis=2, dtype=x.dtype)
+    y = y.reshape(b, s, d)
+
+    aux = aux_load_balance_loss(
+        probs.reshape(-1, cfg.n_experts), top_e.reshape(-1, cfg.top_k), cfg.n_experts
+    )
+
+    if "shared" in p:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["w1"]) * (x @ sh["w3"])
+        y = y + hs @ sh["w2"]
+    return y.astype(x.dtype), aux

@@ -1,0 +1,115 @@
+"""Griffin / RecurrentGemma RG-LRU recurrent block (arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence is linear in h); decode is a single fused update.
+
+The full recurrent block is: linear-in -> causal conv1d(4) -> RG-LRU ->
+gated merge with a GeLU branch -> linear-out, as in the paper's Fig. 2.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = dict[str, Any]
+
+_C = 8.0  # Griffin's fixed temperature on the recurrence gate
+
+
+def rglru_params(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    dr = d  # recurrent width = d_model (Griffin-9B style)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(ks[0], d, dr, dtype),  # recurrent branch
+        "in_y": dense_init(ks[1], d, dr, dtype),  # gate (GeLU) branch
+        "w_a": dense_init(ks[2], dr, dr, dtype),  # recurrence gate
+        "w_i": dense_init(ks[3], dr, dr, dtype),  # input gate
+        "lam": jnp.linspace(0.5, 4.0, dr).astype(jnp.float32),  # Lambda
+        "conv_w": (jax.random.normal(ks[4], (4, dr), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "out": dense_init(ks[5], dr, d, dtype),
+    }
+
+
+def _gates(p: Params, xr: jax.Array):
+    r = jax.nn.sigmoid((xr @ p["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((xr @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # [B, S, dr] (<= 0)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta, i
+
+
+def _causal_conv(x, w, b):
+    cw = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, cw):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[cw - 1 - i]
+    return out + b
+
+
+def apply_rglru(
+    p: Params, x: jax.Array, cfg: ModelConfig, *, return_cache: bool = False
+):
+    """x: [B, S, d] -> [B, S, d] (optionally plus decode cache)."""
+    xin = x @ p["in_x"]
+    xr = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xg = jax.nn.gelu((x @ p["in_y"]).astype(jnp.float32))
+
+    a, beta, i = _gates(p, xr)
+    u = beta * i * xr.astype(jnp.float32)  # forced input
+
+    # h_t = a_t h_{t-1} + u_t  — associative over (a, u)
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+
+    _, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = (h * xg).astype(x.dtype)
+    out = y @ p["out"]
+    if return_cache:
+        s = x.shape[1]
+        tail = xin[:, -3:, :] if s >= 3 else jnp.pad(xin, ((0, 0), (3 - s, 0), (0, 0)))
+        return out, {"h": h[:, -1], "conv": tail}
+    return out
+
+
+def rglru_cache_init(batch: int, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d), dtype),
+    }
+
+
+def apply_rglru_decode(
+    p: Params, x: jax.Array, cache: Params, cfg: ModelConfig
+) -> tuple[jax.Array, Params]:
+    """x: [B, 1, d]."""
+    xin = x @ p["in_x"]  # [B, 1, dr]
+    win = jnp.concatenate([cache["conv"], xin], axis=1)  # [B, 4, dr]
+    xr = (
+        jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+        + p["conv_b"].astype(jnp.float32)
+    )[:, None, :].astype(x.dtype)
+    xg = jax.nn.gelu((x @ p["in_y"]).astype(jnp.float32))
+
+    a, beta, i = _gates(p, xr)
+    u = beta * i * xr.astype(jnp.float32)
+    h = cache["h"][:, None, :] * a + u  # [B, 1, dr]
+    y = (h * xg).astype(x.dtype)
+    return y @ p["out"], {"h": h[:, 0], "conv": win[:, 1:]}

@@ -1,0 +1,203 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked train/prefill + recurrent decode.
+
+Follows arXiv:2405.21060's block-decomposition: within a chunk of length Q
+the output is computed with the quadratic "attention-like" form; across
+chunks a [H, hd, ds] state is propagated with scalar-per-head decay.
+
+Layout notes (single-group, ngroups=1 as in the 2.7b config):
+  in_proj:   d_model -> [z (di), x (di), B (ds), C (ds), dt (H)]
+  conv1d:    causal depthwise width-4 over (x, B, C) channels
+  SSD:       y[t] = sum_{j<=t} C[t]·h-contribution, h decays by exp(dt*A)
+  gate:      gated_rms_norm(y, w, z)   <- the paper's Gate+Norm fusion point
+  out_proj:  di -> d_model
+
+Decode carries (conv_state [B, cw-1, di+2ds], ssm_state [B, H, hd, ds]).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import kernels as K
+
+from .config import SSMConfig
+from .layers import dense_init
+
+Params = dict[str, Any]
+
+
+def ssm_params(key, d_model: int, cfg: SSMConfig, dtype) -> Params:
+    di = cfg.expand * d_model
+    nh = di // cfg.head_dim
+    ds = cfg.d_state
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * ds
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di + 2 * ds + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[2], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds. x: [B, S, C]; w: [cw, C]."""
+    cw = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, cw):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[cw - 1 - i]
+    return out + b
+
+
+def _split_proj(zxbcdt, di, ds, nh):
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * ds]
+    dt = zxbcdt[..., di + di + 2 * ds :]
+    return z, xbc, dt
+
+
+def apply_ssm(
+    p: Params, x: jax.Array, cfg: SSMConfig, *, return_cache: bool = False
+):
+    """Chunked SSD forward. x: [B, S, d_model] -> [B, S, d_model]
+    (optionally plus a decode cache holding the final conv window + state)."""
+    bsz, s, d_model = x.shape
+    di = cfg.expand * d_model
+    ds = cfg.d_state
+    nh = di // cfg.head_dim
+    hd = cfg.head_dim
+    q = min(cfg.chunk, s)
+    if s % q != 0:
+        # pad at the end (causal: padded positions never influence real ones)
+        pad = q - s % q
+        res = apply_ssm(
+            p, jnp.pad(x, ((0, 0), (0, pad), (0, 0))), cfg, return_cache=return_cache
+        )
+        if return_cache:
+            # NOTE: the padded-tail cache is wrong for decode; prefill callers
+            # must use chunk-aligned lengths (all assigned shapes are).
+            return res[0][:, :s], res[1]
+        return res[:, :s]
+    nc = s // q
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(zxbcdt, di, ds, nh)
+    xbc_raw = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = xbc[..., :di], xbc[..., di : di + ds], xbc[..., di + ds :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, H]
+    a = -jnp.exp(p["A_log"])  # [H]
+    da = dt * a  # [B, S, H]
+
+    # chunk views
+    xh = xs.reshape(bsz, nc, q, nh, hd).astype(jnp.float32)
+    bm = bmat.reshape(bsz, nc, q, ds).astype(jnp.float32)
+    cm = cmat.reshape(bsz, nc, q, ds).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, q, nh)
+    dtc = dt.reshape(bsz, nc, q, nh)
+
+    # within-chunk cumulative decay
+    cs = jnp.cumsum(dac, axis=2)  # [B, nc, Q, H]
+    # intra-chunk (quadratic) term: L[t, j] = exp(cs_t - cs_j) for t >= j.
+    # Mask BEFORE exp: masked rel is positive and can overflow exp, and
+    # where(mask, inf, 0) still produces NaN gradients.
+    rel = cs[:, :, :, None, :] - cs[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), jnp.bool_))
+    l_mat = jnp.exp(jnp.where(tri[None, None, :, :, None], rel, -jnp.inf))
+    cb = jnp.einsum("bnts,bnjs->bntj", cm, bm)  # [B,nc,Q,Q]
+    w_mat = cb[..., None] * l_mat * dtc[:, :, None, :, :]  # [B,nc,Q(t),Q(j),H]
+    y_intra = jnp.einsum("bntjh,bnjhd->bnthd", w_mat, xh)
+
+    # chunk-final states: S_n = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)  # [B,nc,Q,H]
+    sb = jnp.einsum(
+        "bnjh,bnjs,bnjhd->bnhds", decay_to_end * dtc, bm, xh
+    )  # [B,nc,H,hd->d? ] -> [B,nc,H,hd,ds]
+
+    # inter-chunk recurrence over nc (sequential scan; nc is small)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])  # [B,nc,H]
+
+    def scan_body(h, xs_):
+        dec, s_new = xs_
+        h_out = h  # state entering this chunk
+        h = h * dec[:, :, None, None] + s_new
+        return h, h_out
+
+    h0 = jnp.zeros((bsz, nh, hd, ds), jnp.float32)
+    h_final, h_in = jax.lax.scan(
+        scan_body,
+        h0,
+        (chunk_decay.swapaxes(0, 1), sb.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # [B,nc,H,hd,ds] state entering each chunk
+
+    # inter-chunk contribution: y += exp(cs_t) * C_t · h_in
+    y_inter = jnp.einsum(
+        "bnts,bnhds,bnth->bnthd", cm, h_in, jnp.exp(cs)
+    )
+    y = y_intra + y_inter + xh * p["D"][None, None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    # Gate + Norm fusion (paper §4.4) then output projection
+    y = K.gated_rms_norm(y, p["norm_w"], z)
+    out = y @ p["out_proj"]
+    if return_cache:
+        cw = cfg.conv_width
+        tail = xbc_raw[:, -(cw - 1) :, :] if s >= cw - 1 else jnp.pad(
+            xbc_raw, ((0, 0), (cw - 1 - s, 0), (0, 0))
+        )
+        return out, {"conv": tail, "state": h_final}
+    return out
+
+
+def ssm_cache_init(batch: int, d_model: int, cfg: SSMConfig, dtype) -> Params:
+    di = cfg.expand * d_model
+    ds = cfg.d_state
+    nh = di // cfg.head_dim
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ds), dtype),
+        "state": jnp.zeros((batch, nh, cfg.head_dim, ds), jnp.float32),
+    }
+
+
+def apply_ssm_decode(
+    p: Params, x: jax.Array, cache: Params, cfg: SSMConfig
+) -> tuple[jax.Array, Params]:
+    """Single-token recurrent update. x: [B, 1, d_model]."""
+    bsz, _, d_model = x.shape
+    di = cfg.expand * d_model
+    ds = cfg.d_state
+    nh = di // cfg.head_dim
+    hd = cfg.head_dim
+
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(zxbcdt[:, 0], di, ds, nh)  # [B, *]
+
+    # conv cache: window = [cache, current]
+    win = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B, cw, C]
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc_c = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = win[:, 1:]
+
+    xs, bm, cm = xbc_c[..., :di], xbc_c[..., di : di + ds], xbc_c[..., di + ds :]
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    a = -jnp.exp(p["A_log"])
+    dec = jnp.exp(dtv * a)  # [B, H]
+
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32)
+    h = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bh,bs,bhd->bhds", dtv, bm.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bs,bhds->bhd", cm.astype(jnp.float32), h) + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = K.gated_rms_norm(y, p["norm_w"], z[:, None, :])
+    return y @ p["out_proj"], {"conv": new_conv, "state": h}

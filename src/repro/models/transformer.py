@@ -1,0 +1,605 @@
+"""Decoder-only LM assembly covering every assigned architecture family.
+
+One code path serves three modes:
+  * ``train``   — full-sequence forward, no caches, remat per block
+  * ``prefill`` — full-sequence forward that also emits decode caches
+  * ``decode``  — single-token step consuming/updating caches
+
+Layers run as ``lax.scan`` over identical "superblocks" (the config's cycled
+pattern) so the compiled HLO is O(pattern) rather than O(n_layers) — this is
+what keeps 100-layer dry-run compiles tractable and is also how real
+deployments keep compile time bounded.
+
+Sharding: an optional ``policy`` object (see ``repro.distributed.sharding``)
+provides ``constrain(x, kind)`` hooks; with ``policy=None`` the model is
+sharding-agnostic and runs on CPU unmodified.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (
+    blocked_attention,
+    decode_attention,
+    local_attention,
+    repeat_kv,
+)
+from .config import ModelConfig
+from .layers import (
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    chunked_softmax_xent,
+    dense_init,
+    embed_init,
+    last_token_logits,
+    mlp_params,
+    norm_params,
+)
+from .moe import apply_moe, moe_params
+from .rglru import apply_rglru, apply_rglru_decode, rglru_cache_init, rglru_params
+from .ssm import apply_ssm, apply_ssm_decode, ssm_cache_init, ssm_params
+from repro import kernels as K
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# parameter init
+# --------------------------------------------------------------------------
+
+
+def _attn_params(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if cross:
+        p["wq"] = dense_init(ks[0], d, h * dh, dt)
+        p["wkv"] = dense_init(ks[1], d, 2 * hkv * dh, dt)
+        p["gate"] = jnp.zeros((), jnp.float32)  # tanh-gated residual (llama3.2v)
+    else:
+        p["wqkv"] = dense_init(ks[0], d, (h + 2 * hkv) * dh, dt)
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros(((h + 2 * hkv) * dh,), dt)
+    p["wo"] = dense_init(ks[2], h * dh, d, dt)
+    if cfg.qk_norm:
+        p["qnorm"] = jnp.ones((dh,), jnp.float32)
+        p["knorm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def block_params(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Params = {"norm1": norm_params(cfg.d_model, cfg.norm)}
+    if kind in ("attn", "local", "moe"):
+        p["attn"] = _attn_params(ks[0], cfg)
+    elif kind == "cross":
+        p["attn"] = _attn_params(ks[0], cfg, cross=True)
+    elif kind == "rglru":
+        p["mixer"] = rglru_params(ks[0], cfg, dt)
+    elif kind == "ssm":
+        p["mixer"] = ssm_params(ks[0], cfg.d_model, cfg.ssm, dt)
+        return p  # mamba block has no MLP half
+    else:
+        raise ValueError(kind)
+    p["norm2"] = norm_params(cfg.d_model, cfg.norm)
+    if kind == "moe":
+        p["moe"] = moe_params(ks[1], cfg.d_model, cfg.moe, dt)
+    else:
+        p["mlp"] = mlp_params(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    lead, pat, n_rep, tail = cfg.superblocks()
+    keys = jax.random.split(key, 4 + len(lead) + len(tail))
+    params: Params = {
+        "embed": embed_init(keys[0], cfg.vocab, cfg.d_model, _dtype(cfg)),
+        "final_norm": norm_params(cfg.d_model, cfg.norm),
+    }
+    params["lead"] = [
+        block_params(keys[2 + i], cfg, k) for i, k in enumerate(lead)
+    ]
+    params["tail"] = [
+        block_params(keys[2 + len(lead) + i], cfg, k) for i, k in enumerate(tail)
+    ]
+    if n_rep > 0:
+        def one_super(k):
+            sks = jax.random.split(k, len(pat))
+            return {f"s{i}": block_params(sks[i], cfg, kind) for i, kind in enumerate(pat)}
+
+        sb_keys = jax.random.split(keys[1], n_rep)
+        stacked = jax.vmap(one_super)(sb_keys)
+        params["blocks"] = stacked
+    else:
+        params["blocks"] = {}
+    return params
+
+
+# --------------------------------------------------------------------------
+# cache init
+# --------------------------------------------------------------------------
+
+
+def _attn_cache_init(batch: int, cap: int, cfg: ModelConfig, dt) -> Params:
+    return {
+        "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def _local_cache_init(batch: int, cfg: ModelConfig, dt) -> Params:
+    w = cfg.local_window
+    return {
+        "k": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, w, cfg.n_kv_heads, cfg.head_dim), dt),
+        "pos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def _cross_cache_init(batch: int, cfg: ModelConfig, dt) -> Params:
+    n = max(cfg.n_image_tokens, 1)
+    return {
+        "k": jnp.zeros((batch, n, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, n, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def kind_cache_init(kind: str, batch: int, cap: int, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    if kind in ("attn", "moe"):
+        return _attn_cache_init(batch, cap, cfg, dt)
+    if kind == "local":
+        return _local_cache_init(batch, cfg, dt)
+    if kind == "cross":
+        return _cross_cache_init(batch, cfg, dt)
+    if kind == "rglru":
+        return rglru_cache_init(batch, cfg, dt)
+    if kind == "ssm":
+        return ssm_cache_init(batch, cfg.d_model, cfg.ssm, dt)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cap: int) -> Params:
+    lead, pat, n_rep, tail = cfg.superblocks()
+    cache: Params = {
+        "lead": [kind_cache_init(k, batch, cap, cfg) for k in lead],
+        "tail": [kind_cache_init(k, batch, cap, cfg) for k in tail],
+    }
+    if n_rep > 0:
+        def one(_):
+            return {
+                f"s{i}": kind_cache_init(kind, batch, cap, cfg)
+                for i, kind in enumerate(pat)
+            }
+
+        cache["blocks"] = jax.vmap(one)(jnp.arange(n_rep))
+    else:
+        cache["blocks"] = {}
+    return cache
+
+
+# --------------------------------------------------------------------------
+# block application
+# --------------------------------------------------------------------------
+
+
+def _project_qkv(bp: Params, x, cfg: ModelConfig):
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    qkv = x @ bp["wqkv"]
+    if "bqkv" in bp:
+        qkv = qkv + bp["bqkv"]
+    b, s, _ = qkv.shape
+    q = qkv[..., : h * dh].reshape(b, s, h, dh)
+    k = qkv[..., h * dh : (h + hkv) * dh].reshape(b, s, hkv, dh)
+    v = qkv[..., (h + hkv) * dh :].reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q, k = K.qk_norm(q, k, bp["qnorm"], bp["knorm"], eps=cfg.norm_eps)
+    return q, k, v
+
+
+def _self_attn_full(bp, x, cfg: ModelConfig, positions, policy, *, local: bool):
+    q, k, v = _project_qkv(bp, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    g = cfg.n_heads // cfg.n_kv_heads
+    if policy is not None:
+        q = policy.constrain(q, "attn_q")
+        k = policy.constrain(k, "attn_kv")
+        v = policy.constrain(v, "attn_kv")
+    if local:
+        ctx = local_attention(q, repeat_kv(k, g), repeat_kv(v, g), window=cfg.local_window)
+    else:
+        ctx = blocked_attention(q, repeat_kv(k, g), repeat_kv(v, g), causal=True)
+    b, s = x.shape[:2]
+    out = ctx.reshape(b, s, cfg.n_heads * cfg.head_dim) @ bp["wo"]
+    return out, (k, v)
+
+
+def _cross_attn_full(bp, x, memory, cfg: ModelConfig, policy):
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = x.shape
+    n = memory.shape[1]
+    q = (x @ bp["wq"]).reshape(b, s, h, dh)
+    kv = memory @ bp["wkv"]
+    k = kv[..., : hkv * dh].reshape(b, n, hkv, dh)
+    v = kv[..., hkv * dh :].reshape(b, n, hkv, dh)
+    g = h // hkv
+    ctx = blocked_attention(q, repeat_kv(k, g), repeat_kv(v, g), causal=False)
+    out = ctx.reshape(b, s, h * dh) @ bp["wo"]
+    return jnp.tanh(bp["gate"]).astype(out.dtype) * out, (k, v)
+
+
+def apply_block(
+    bp: Params,
+    x,
+    kind: str,
+    cfg: ModelConfig,
+    positions,
+    *,
+    memory=None,
+    policy=None,
+    n_groups: int = 1,
+    collect_cache: bool = False,
+):
+    """One transformer block in train/prefill mode.
+
+    Returns (x, aux_loss, cache_or_None).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = apply_norm(bp["norm1"], x, cfg.norm, cfg.norm_eps)
+    if policy is not None:
+        h = policy.constrain(h, "resid")
+    if kind in ("attn", "moe", "local"):
+        out, (k, v) = _self_attn_full(
+            bp["attn"], h, cfg, positions, policy, local=(kind == "local")
+        )
+        x = x + out
+        if collect_cache:
+            cache = _make_attn_cache(k, v, kind, cfg)
+    elif kind == "cross":
+        out, (k, v) = _cross_attn_full(bp["attn"], h, memory, cfg, policy)
+        x = x + out
+        if collect_cache:
+            cache = {"k": k, "v": v}
+    elif kind == "rglru":
+        if collect_cache:
+            out, cache = apply_rglru(bp["mixer"], h, cfg, return_cache=True)
+        else:
+            out = apply_rglru(bp["mixer"], h, cfg)
+        x = x + out
+    elif kind == "ssm":
+        if collect_cache:
+            out, cache = apply_ssm(bp["mixer"], h, cfg.ssm, return_cache=True)
+        else:
+            out = apply_ssm(bp["mixer"], h, cfg.ssm)
+        return x + out, aux, cache
+    else:
+        raise ValueError(kind)
+
+    h2 = apply_norm(bp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if kind == "moe":
+        out2, aux = apply_moe(bp["moe"], h2, cfg.moe, n_groups=n_groups, policy=policy)
+    else:
+        out2 = apply_mlp(bp["mlp"], h2)
+    if policy is not None:
+        out2 = policy.constrain(out2, "resid")
+    return x + out2, aux, cache
+
+
+def _make_attn_cache(k, v, kind: str, cfg: ModelConfig) -> Params:
+    if kind == "local":
+        w = cfg.local_window
+        s = k.shape[1]
+        n = min(s, w)
+        pos = jnp.arange(s - n, s)
+        slots = pos % w
+        ring_k = jnp.zeros((k.shape[0], w) + k.shape[2:], k.dtype).at[:, slots].set(
+            k[:, s - n :]
+        )
+        ring_v = jnp.zeros((v.shape[0], w) + v.shape[2:], v.dtype).at[:, slots].set(
+            v[:, s - n :]
+        )
+        pos_arr = jnp.full((w,), -1, jnp.int32).at[slots].set(pos)
+        return {"k": ring_k, "v": ring_v, "pos": pos_arr}
+    return {"k": k, "v": v}
+
+
+# --------------------------------------------------------------------------
+# decode-mode block application
+# --------------------------------------------------------------------------
+
+
+def apply_block_decode(
+    bp: Params,
+    x,
+    kind: str,
+    cfg: ModelConfig,
+    cache: Params,
+    pos,
+    *,
+    policy=None,
+    n_groups: int = 1,
+):
+    """One block for a single new token at position ``pos`` (scalar)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["norm1"], x, cfg.norm, cfg.norm_eps)
+    new_cache = cache
+    if kind in ("attn", "moe"):
+        q, k, v = _project_qkv(bp["attn"], h, cfg)
+        posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, pos, 0, 0))
+        g = cfg.n_heads // cfg.n_kv_heads
+        ctx = decode_attention(q, repeat_kv(kc, g), repeat_kv(vc, g), pos + 1)
+        out = ctx.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim) @ bp["attn"]["wo"]
+        x = x + out
+        new_cache = {"k": kc, "v": vc}
+    elif kind == "local":
+        q, k, v = _project_qkv(bp["attn"], h, cfg)
+        posv = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+        w = cfg.local_window
+        slot = pos % w
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        pos_arr = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.asarray([pos], jnp.int32), (slot,)
+        )
+        g = cfg.n_heads // cfg.n_kv_heads
+        # valid = stored position within (pos - w, pos]
+        valid = (pos_arr >= 0) & (pos - pos_arr < w) & (pos_arr <= pos)
+        ctx = _masked_decode_attention(q, repeat_kv(kc, g), repeat_kv(vc, g), valid)
+        out = ctx.reshape(x.shape[0], 1, cfg.n_heads * cfg.head_dim) @ bp["attn"]["wo"]
+        x = x + out
+        new_cache = {"k": kc, "v": vc, "pos": pos_arr}
+    elif kind == "cross":
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ bp["attn"]["wq"]).reshape(x.shape[0], 1, hq, dh)
+        g = hq // hkv
+        ctx = decode_attention(
+            q,
+            repeat_kv(cache["k"], g),
+            repeat_kv(cache["v"], g),
+            cache["k"].shape[1],
+        )
+        out = ctx.reshape(x.shape[0], 1, hq * dh) @ bp["attn"]["wo"]
+        x = x + jnp.tanh(bp["attn"]["gate"]).astype(out.dtype) * out
+    elif kind == "rglru":
+        out, new_cache = apply_rglru_decode(bp["mixer"], h, cache, cfg)
+        x = x + out
+    elif kind == "ssm":
+        out, new_cache = apply_ssm_decode(bp["mixer"], h, cache, cfg.ssm)
+        return x + out, aux, new_cache
+    else:
+        raise ValueError(kind)
+
+    h2 = apply_norm(bp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if kind == "moe":
+        out2, aux = apply_moe(
+            bp["moe"], h2, cfg.moe, n_groups=n_groups, policy=policy, no_drop=True
+        )
+    else:
+        out2 = apply_mlp(bp["mlp"], h2)
+    return x + out2, aux, new_cache
+
+
+def _masked_decode_attention(q, kc, vc, valid):
+    """decode attention with an explicit validity mask over cache slots."""
+    dh = q.shape[-1]
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32) * dh**-0.5, kc.astype(jnp.float32)
+    )
+    s = jnp.where(valid[None, None, None, :], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vc.astype(jnp.float32)).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# full model: train / prefill / decode
+# --------------------------------------------------------------------------
+
+
+def forward(
+    params: Params,
+    cfg: ModelConfig,
+    tokens,
+    *,
+    memory=None,
+    policy=None,
+    n_groups: int = 1,
+    remat: bool = True,
+    collect_cache: bool = False,
+    unroll: bool = False,
+):
+    """Token ids [B, S] -> (hidden [B, S, d], aux_loss, caches|None)."""
+    lead, pat, n_rep, tail = cfg.superblocks()
+    x = params["embed"][tokens]
+    if policy is not None:
+        x = policy.constrain(x, "resid")
+    positions = jnp.arange(tokens.shape[1])
+    aux = jnp.zeros((), jnp.float32)
+    caches: Params = {"lead": [], "tail": [], "blocks": {}}
+
+    def run(bp, x, kind):
+        return apply_block(
+            bp, x, kind, cfg, positions,
+            memory=memory, policy=policy, n_groups=n_groups,
+            collect_cache=collect_cache,
+        )
+
+    for bp, kind in zip(params["lead"], lead):
+        x, a, c = run(bp, x, kind)
+        aux += a
+        caches["lead"].append(c)
+
+    if n_rep > 0:
+        def superblock(x, bp_stack):
+            a_tot = jnp.zeros((), jnp.float32)
+            cs = {}
+            xx = x
+            for i, kind in enumerate(pat):
+                xx, a, c = run(bp_stack[f"s{i}"], xx, kind)
+                a_tot += a
+                cs[f"s{i}"] = c
+            if collect_cache:
+                return xx, (a_tot, cs)
+            return xx, a_tot
+
+        body = jax.checkpoint(superblock) if remat else superblock
+
+        def scan_body(x, bp_stack):
+            return body(x, bp_stack)
+
+        x, ys = jax.lax.scan(scan_body, x, params["blocks"], unroll=unroll)
+        if collect_cache:
+            aux += ys[0].sum()
+            caches["blocks"] = ys[1]
+        else:
+            aux += ys.sum()
+
+    for bp, kind in zip(params["tail"], tail):
+        x, a, c = run(bp, x, kind)
+        aux += a
+        caches["tail"].append(c)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x, aux, (caches if collect_cache else None)
+
+
+def lm_loss(
+    params: Params,
+    cfg: ModelConfig,
+    tokens,
+    labels,
+    *,
+    memory=None,
+    policy=None,
+    n_groups: int = 1,
+    loss_chunk: int = 512,
+    unroll: bool = False,
+):
+    h, aux, _ = forward(
+        params, cfg, tokens, memory=memory, policy=policy, n_groups=n_groups,
+        unroll=unroll,
+    )
+    ce = chunked_softmax_xent(h, params["embed"], labels, chunk=min(loss_chunk, tokens.shape[1]))
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    return ce + aux_w * aux
+
+
+def prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens,
+    cache_cap: int,
+    *,
+    memory=None,
+    policy=None,
+    n_groups: int = 1,
+    unroll: bool = False,
+):
+    """Run the prompt, return (last-token logits [B, V], caches, hidden)."""
+    h, _, caches = forward(
+        params, cfg, tokens,
+        memory=memory, policy=policy, n_groups=n_groups,
+        remat=False, collect_cache=True, unroll=unroll,
+    )
+    caches = _pad_attn_caches(caches, cfg, cache_cap)
+    logits = last_token_logits(h[:, -1], params["embed"])
+    return logits, caches
+
+
+def _pad_attn_caches(caches, cfg: ModelConfig, cap: int):
+    """Grow full-attention k/v caches to capacity ``cap`` along seq dim."""
+
+    def pad_leaf_tree(c, kind):
+        if c is None or kind not in ("attn", "moe"):
+            return c
+        s = c["k"].shape[1]
+        if s >= cap:
+            return c
+        padw = ((0, 0), (0, cap - s), (0, 0), (0, 0))
+        return {"k": jnp.pad(c["k"], padw), "v": jnp.pad(c["v"], padw)}
+
+    lead, pat, n_rep, tail = cfg.superblocks()
+    out = {
+        "lead": [pad_leaf_tree(c, k) for c, k in zip(caches["lead"], lead)],
+        "tail": [pad_leaf_tree(c, k) for c, k in zip(caches["tail"], tail)],
+        "blocks": {},
+    }
+    if n_rep > 0 and caches["blocks"]:
+        out["blocks"] = {
+            f"s{i}": (
+                {
+                    "k": jnp.pad(caches["blocks"][f"s{i}"]["k"], ((0, 0),) + (((0, 0), (0, cap - caches["blocks"][f"s{i}"]["k"].shape[2]), (0, 0), (0, 0)))),
+                    "v": jnp.pad(caches["blocks"][f"s{i}"]["v"], ((0, 0),) + (((0, 0), (0, cap - caches["blocks"][f"s{i}"]["v"].shape[2]), (0, 0), (0, 0)))),
+                }
+                if kind in ("attn", "moe") and caches["blocks"][f"s{i}"]["k"].shape[2] < cap
+                else caches["blocks"][f"s{i}"]
+            )
+            for i, kind in enumerate(pat)
+        }
+    return out
+
+
+def decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    caches: Params,
+    token,
+    pos,
+    *,
+    policy=None,
+    n_groups: int = 1,
+    unroll: bool = False,
+):
+    """token: [B, 1] int32; pos: scalar int32.  Returns (logits, new caches)."""
+    lead, pat, n_rep, tail = cfg.superblocks()
+    x = params["embed"][token]
+    new_caches: Params = {"lead": [], "tail": [], "blocks": {}}
+
+    for bp, kind, c in zip(params["lead"], lead, caches["lead"]):
+        x, _, nc = apply_block_decode(
+            bp, x, kind, cfg, c, pos, policy=policy, n_groups=n_groups
+        )
+        new_caches["lead"].append(nc)
+
+    if n_rep > 0:
+        def scan_body(x, xs):
+            bp_stack, c_stack = xs
+            ncs = {}
+            for i, kind in enumerate(pat):
+                x, _, nc = apply_block_decode(
+                    bp_stack[f"s{i}"], x, kind, cfg, c_stack[f"s{i}"], pos,
+                    policy=policy, n_groups=n_groups,
+                )
+                ncs[f"s{i}"] = nc
+            return x, ncs
+
+        x, nblocks = jax.lax.scan(scan_body, x, (params["blocks"], caches["blocks"]), unroll=unroll)
+        new_caches["blocks"] = nblocks
+
+    for bp, kind, c in zip(params["tail"], tail, caches["tail"]):
+        x, _, nc = apply_block_decode(
+            bp, x, kind, cfg, c, pos, policy=policy, n_groups=n_groups
+        )
+        new_caches["tail"].append(nc)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = last_token_logits(x[:, -1], params["embed"])
+    return logits, new_caches

@@ -1,0 +1,116 @@
+"""AdamW with configurable state dtype + global-norm clipping.
+
+Implemented from scratch (no optax in the container).  The optimizer-state
+dtype is per-model-configurable: bf16 moments halve optimizer HBM — the
+distributed-optimization trick that lets kimi-k2 (1T params) fit 512 v5e
+chips; fp32 is the default elsewhere.  Moments stored in bf16 are
+round-tripped through fp32 inside the update (stochastic-rounding-free but
+stable in practice for beta2 <= 0.95-0.999 at these scales).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .schedule import get_schedule
+
+Params = Any
+
+# Leaves above this element count are updated slice-by-slice over their
+# leading (layer-stack) dim via lax.map, bounding the fp32 temp working set
+# to one layer's worth instead of e.g. 60 stacked MoE expert tensors.
+CHUNK_THRESHOLD_ELEMS = 64 * 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"  # constant | cosine | wsd
+    warmup: int = 100
+    total_steps: int = 10_000
+    state_dtype: str = "float32"
+
+    def schedule_fn(self) -> Callable:
+        return get_schedule(self.schedule, self.peak_lr, self.warmup, self.total_steps)
+
+
+def init_opt_state(params: Params, config: OptimizerConfig) -> dict:
+    dt = jnp.dtype(config.state_dtype)
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def _decay_mask(path) -> bool:
+    """Apply weight decay only to >=2D weight matrices (not norms/biases)."""
+    return True
+
+
+def adamw_update(
+    params: Params,
+    grads: Params,
+    opt_state: dict,
+    step: jax.Array,
+    config: OptimizerConfig,
+):
+    """One AdamW step.  Returns (new_params, new_opt_state, stats)."""
+    dt = jnp.dtype(config.state_dtype)
+    lr = config.schedule_fn()(step)
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, config.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    stepf = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - config.beta1**stepf
+    bc2 = 1.0 - config.beta2**stepf
+
+    chunk_threshold = CHUNK_THRESHOLD_ELEMS
+
+    def upd_math(p, g, m, v, decay: bool):
+        gf = g.astype(jnp.float32) * clip
+        mf = config.beta1 * m.astype(jnp.float32) + (1 - config.beta1) * gf
+        vf = config.beta2 * v.astype(jnp.float32) + (1 - config.beta2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + config.eps)
+        pf = p.astype(jnp.float32)
+        if decay:
+            delta = delta + config.weight_decay * pf
+        return (
+            (pf - lr * delta).astype(p.dtype),
+            mf.astype(dt),
+            vf.astype(dt),
+        )
+
+    def upd(p, g, m, v):
+        decay = p.ndim >= 2  # decay weight matrices, not norms/biases
+        if p.size > chunk_threshold and p.ndim >= 2 and p.shape[0] > 1:
+            return jax.lax.map(lambda a: upd_math(*a, decay), (p, g, m, v))
+        return upd_math(p, g, m, v, decay)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v}, stats

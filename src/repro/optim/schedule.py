@@ -1,0 +1,57 @@
+"""Learning-rate schedules (pure jnp step -> lr functions).
+
+Includes WSD (Warmup-Stable-Decay) — MiniCPM's schedule (arXiv:2404.06395) —
+alongside cosine and constant.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(peak_lr: float, warmup: int = 0):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0) if warmup else 1.0
+        return peak_lr * w
+
+    return f
+
+
+def cosine(peak_lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(step < warmup, warm, cos)
+
+    return f
+
+
+def wsd(peak_lr: float, warmup: int, total_steps: int, decay_frac: float = 0.1,
+        final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long stable plateau, short
+    exponential-ish (linear here) decay over the last ``decay_frac``."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / jnp.maximum(warmup, 1)
+        dec = 1.0 - (1.0 - final_frac) * jnp.clip(
+            (step - decay_start) / jnp.maximum(total_steps - decay_start, 1), 0, 1
+        )
+        stable = jnp.where(step >= decay_start, dec, 1.0)
+        return peak_lr * jnp.where(step < warmup, warm, stable)
+
+    return f
+
+
+def get_schedule(name: str, peak_lr: float, warmup: int, total_steps: int):
+    if name == "constant":
+        return constant(peak_lr, warmup)
+    if name == "cosine":
+        return cosine(peak_lr, warmup, total_steps)
+    if name == "wsd":
+        return wsd(peak_lr, warmup, total_steps)
+    raise ValueError(f"unknown schedule {name!r}")

@@ -1,0 +1,122 @@
+"""Training loop: bucketed steps + closed-loop scheduling + fault tolerance.
+
+The loop is bucket-shape-aware: jitted step functions are cached per
+(batch, seq) signature, so a shape mix costs one compile per bucket and the
+steady state pays zero retrace.  Per-step telemetry feeds the AdaptiveLoad
+scheduler, which may replan buckets; plan updates propagate to the loader
+without draining it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core.scheduler import AdaptiveLoadScheduler
+from repro.core.telemetry import WorkerStepRecord
+from repro.distributed.fault_tolerance import FaultTolerantRunner
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptimizerConfig
+from repro.train.steps import make_train_step
+
+
+@dataclasses.dataclass
+class TrainHistory:
+    losses: list[float] = dataclasses.field(default_factory=list)
+    step_times: list[float] = dataclasses.field(default_factory=list)
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    events: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def throughput(self) -> float:
+        t = sum(self.step_times)
+        return sum(self.tokens) / t if t > 0 else 0.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt: OptimizerConfig,
+        *,
+        policy=None,
+        scheduler: AdaptiveLoadScheduler | None = None,
+        ft: FaultTolerantRunner | None = None,
+        donate: bool = True,
+    ):
+        self.cfg = cfg
+        self.opt = opt
+        self.policy = policy
+        self.scheduler = scheduler
+        self.ft = ft
+        self._step_fn = make_train_step(cfg, opt, policy)
+        self._jitted: dict[tuple, Callable] = {}
+        self._donate = donate
+
+    def _jit_for(self, batch) -> Callable:
+        sig = tuple(sorted((k, v.shape, str(v.dtype)) for k, v in batch.items()))
+        if sig not in self._jitted:
+            self._jitted[sig] = jax.jit(
+                self._step_fn, donate_argnums=(0,) if self._donate else ()
+            )
+        return self._jitted[sig]
+
+    def run(
+        self,
+        state,
+        data_iter,
+        n_steps: int,
+        *,
+        rng=None,
+        log_every: int = 50,
+        on_metrics: Callable[[int, dict], None] | None = None,
+    ):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        hist = TrainHistory()
+        for i in range(n_steps):
+            step_batches = next(data_iter)
+            t0 = time.perf_counter()
+            loss_acc, tok = 0.0, 0
+            for bucket, batch in step_batches:  # accumulation microbatches
+                rng, sub = jax.random.split(rng)
+                fn = self._jit_for(batch)
+                state, metrics = fn(state, batch, sub)
+                loss_acc += float(metrics["loss"])
+                tok += bucket.tokens
+            jax.block_until_ready(state["step"])
+            dt = time.perf_counter() - t0
+
+            hist.losses.append(loss_acc / max(len(step_batches), 1))
+            hist.step_times.append(dt)
+            hist.tokens.append(tok)
+
+            if self.scheduler is not None:
+                recs = [
+                    WorkerStepRecord(
+                        step=i, worker=0,
+                        batch_size=b.batch_size, seq_len=b.seq_len,
+                        compute_time=dt / max(len(step_batches), 1),
+                    )
+                    for b, _ in step_batches
+                ]
+                self.scheduler.observe(recs)
+
+            if self.ft is not None:
+                if self.ft.maybe_checkpoint(state, i, dt):
+                    hist.events.append(f"ckpt@{i}")
+                failure = self.ft.check_failures()
+                if failure is not None:
+                    hist.events.append(f"failure@{i}:{failure['plan']}")
+
+            if on_metrics is not None:
+                on_metrics(i, {"loss": hist.losses[-1], "time": dt, "tokens": tok})
+            if log_every and i % log_every == 0:
+                print(
+                    f"step {i:5d}  loss {hist.losses[-1]:.4f}  "
+                    f"{tok/dt:,.0f} tok/s  ({len(step_batches)} microbatches)"
+                )
+        return state, hist

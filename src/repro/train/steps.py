@@ -1,0 +1,127 @@
+"""Step-function factories: train / prefill / decode for every arch family.
+
+These are the functions the launcher jits (and the dry-run lowers).  They are
+pure: ``state``/``caches`` in, new ones out.  Sharding enters only through
+the optional ``ShardingPolicy`` (activation constraints) and the jit
+in/out_shardings the launcher attaches.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mmdit as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptimizerConfig, adamw_update, init_opt_state
+
+Params = Any
+
+
+# -- state ---------------------------------------------------------------------
+
+
+def init_state(key, cfg: ModelConfig, opt: OptimizerConfig) -> dict:
+    if cfg.family == "mmdit":
+        params = M.init_params(key, cfg)
+    else:
+        params = T.init_params(key, cfg)
+    return {
+        "params": params,
+        "opt": init_opt_state(params, opt),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_shapes(cfg: ModelConfig, opt: OptimizerConfig) -> dict:
+    """ShapeDtypeStruct pytree of the train state (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), cfg, opt)
+    )
+
+
+# -- train -----------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callable:
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def loss_fn(params, batch, rng):
+        if cfg.family == "mmdit":
+            return M.rectified_flow_loss(
+                params, cfg, batch["latents"], batch["text"], rng, policy=policy,
+                unroll=unroll,
+            )
+        memory = batch.get("memory") if isinstance(batch, dict) else None
+        return T.lm_loss(
+            params,
+            cfg,
+            batch["tokens"],
+            batch["labels"],
+            memory=memory,
+            policy=policy,
+            n_groups=n_groups,
+            unroll=unroll,
+        )
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: OptimizerConfig, policy=None,
+                    unroll: bool = False) -> Callable:
+    loss_fn = make_loss_fn(cfg, policy, unroll)
+
+    def train_step(state, batch, rng):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch, rng)
+        new_params, new_opt, stats = adamw_update(
+            state["params"], grads, state["opt"], state["step"], opt
+        )
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+# -- serve -----------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, cache_cap: int, policy=None,
+                      unroll: bool = False) -> Callable:
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def prefill_step(params, tokens, memory=None):
+        return T.prefill(
+            params, cfg, tokens, cache_cap,
+            memory=memory, policy=policy, n_groups=n_groups, unroll=unroll,
+        )
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callable:
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def decode_step(params, caches, token, pos):
+        return T.decode_step(
+            params, cfg, caches, token, pos, policy=policy, n_groups=n_groups,
+            unroll=unroll,
+        )
+
+    return decode_step
+
+
+def make_denoise_step(cfg: ModelConfig, policy=None) -> Callable:
+    """MMDiT serving: one velocity evaluation (the unit of diffusion
+    sampling; a sampler chains these)."""
+
+    def denoise_step(params, latents, text, t):
+        return M.forward(params, cfg, latents, text, t, policy=policy, remat=False)
+
+    return denoise_step

@@ -1,0 +1,138 @@
+"""Balancer (LPT / metrics) and closed-loop scheduler tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AdaptiveLoadScheduler,
+    AnalyticDeviceModel,
+    CostModel,
+    ModelDims,
+    SchedulerConfig,
+    WorkerStepRecord,
+    assign_lpt,
+    assign_random,
+    makespan,
+    step_metrics,
+)
+from repro.core.bucketing import DataShape
+
+DIMS = ModelDims(n_layers=8, d_model=512, d_ff=2048, n_heads=8, head_dim=64)
+SHAPES = [DataShape(1, 480, 832, 77), DataShape(33, 480, 832, 77),
+          DataShape(81, 720, 1280, 77)]
+
+
+class TestBalancer:
+    @given(
+        loads=st.lists(st.floats(0.1, 100.0), min_size=4, max_size=64),
+        n=st.integers(2, 8),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_lpt_beats_4_3_bound(self, loads, n):
+        assignment = assign_lpt(loads, n)
+        # every item placed exactly once
+        placed = sorted(i for grp in assignment for i in grp)
+        assert placed == list(range(len(loads)))
+        desc = sorted(loads, reverse=True)
+        opt_lb = max(sum(loads) / n, max(loads))
+        if len(desc) > n:
+            opt_lb = max(opt_lb, desc[n - 1] + desc[n])  # pigeonhole pair
+        assert makespan(loads, assignment) <= (4 / 3) * opt_lb + 1e-9
+
+    @given(
+        loads=st.lists(st.floats(0.5, 50.0), min_size=8, max_size=64),
+        n=st.integers(2, 8),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_lpt_within_4_3_of_any_assignment(self, loads, n):
+        """LPT <= 4/3 OPT <= 4/3 x (any assignment, incl. random). A specific
+        random shuffle CAN beat LPT pointwise, so only the ratio is lawful."""
+        rng = np.random.default_rng(0)
+        rand = assign_random(len(loads), n, rng)
+        assert (
+            makespan(loads, assign_lpt(loads, n))
+            <= (4 / 3) * makespan(loads, rand) + 1e-9
+        )
+
+    def test_step_metrics(self):
+        m = step_metrics([1.0, 2.0, 4.0], [10.0, 20.0, 40.0], tokens=100)
+        assert m.step_time == 4.0
+        assert m.cv_step == pytest.approx((4 - 1) / 4)
+        assert m.wait_sync == (3.0, 2.0, 0.0)
+        mean, std = np.mean([10, 20, 40]), np.std([10, 20, 40])
+        assert m.compute_cv == pytest.approx(std / mean)
+
+
+def _scheduler(**kw):
+    dev = AnalyticDeviceModel(DIMS, overhead=0.05)
+    from repro.core import fit_cost_model, run_analytic_benchmark, sweep_grid
+
+    model = fit_cost_model(
+        run_analytic_benchmark(dev, sweep_grid([4096, 16384, 32768], max_batch=8))
+    )
+    cfg = SchedulerConfig(
+        target_sync=model.predict(2, 32768), m_mem=100_000,
+        refit_interval=5, min_samples=8, **kw,
+    )
+    return AdaptiveLoadScheduler(cfg, SHAPES, initial_model=model, n_workers=8), dev
+
+
+class TestScheduler:
+    def test_straggler_derate_and_clear(self):
+        sch, dev = _scheduler(straggler_threshold=1.2)
+        rng = np.random.default_rng(0)
+        for step in range(12):
+            recs = []
+            for w in range(8):
+                b = sch.buckets[rng.integers(len(sch.buckets))]
+                t = dev.step_time(b.batch_size, b.seq_len)
+                if w == 2:
+                    t *= 1.8
+                recs.append(WorkerStepRecord(step, w, b.batch_size, b.seq_len, t))
+            sch.observe(recs)
+        assert any("straggler derate" in u.reason for u in sch.updates)
+        m_comp_derated = sch.policy.m_comp
+        # straggler heals -> budget restored
+        for step in range(12, 40):
+            recs = [
+                WorkerStepRecord(
+                    step, w, 2, 16384, dev.step_time(2, 16384) * (1 + 0.01 * w)
+                )
+                for w in range(8)
+            ]
+            sch.observe(recs)
+        assert any("straggler cleared" in u.reason for u in sch.updates)
+        assert sch.policy.m_comp > m_comp_derated
+
+    def test_elastic_resize_replans(self):
+        sch, _ = _scheduler()
+        before = len(sch.updates)
+        sch.resize(16)
+        assert sch.n_workers == 16
+        assert len(sch.updates) == before + 1
+        with pytest.raises(ValueError):
+            sch.resize(0)
+
+    def test_refit_updates_model(self):
+        sch, dev = _scheduler()
+        # feed telemetry from a *different* (steeper) device: refit should fire
+        steep = AnalyticDeviceModel(DIMS, overhead=0.05, attn_efficiency=0.05)
+        rng = np.random.default_rng(0)
+        for step in range(25):
+            recs = []
+            for w in range(8):
+                b = sch.buckets[rng.integers(len(sch.buckets))]
+                recs.append(
+                    WorkerStepRecord(
+                        step, w, b.batch_size, b.seq_len,
+                        steep.step_time(b.batch_size, b.seq_len, rng),
+                    )
+                )
+            sch.observe(recs)
+        assert any("refit" in u.reason for u in sch.updates)
+
+    def test_describe(self):
+        sch, _ = _scheduler()
+        assert "AdaptiveLoadScheduler" in sch.describe()
+        assert sch.global_batch_tokens() > 0

@@ -1,0 +1,111 @@
+"""Unit + property tests for the dual-constraint bucketing (paper Eq. 2)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketing import (
+    Bucket,
+    BucketingPolicy,
+    DataShape,
+    dual_constraint_batch_size,
+    equal_token_batch_size,
+    load_statistics,
+)
+
+
+class TestDataShape:
+    def test_image_vs_video_tokens(self):
+        img = DataShape(1, 480, 832, 77)
+        vid = DataShape(81, 480, 832, 77)
+        assert img.is_image and not vid.is_image
+        assert vid.visual_tokens == 11 * img.visual_tokens  # (81-1)/8+1 = 11
+        assert img.seq_len == img.visual_tokens + 77
+
+    def test_compression_factors(self):
+        s = DataShape(17, 480, 832, 0)
+        # t = (17-1)/8 + 1 = 3; h = 480/16 = 30; w = 832/16 = 52
+        assert s.visual_tokens == 3 * 30 * 52
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            DataShape(0, 64, 64)
+
+
+class TestEq2:
+    def test_paper_regime(self):
+        # Table 1: B=3 at S=48k under M_mem=150k; compute bound cuts it to 1
+        assert equal_token_batch_size(48_000, m_mem=150_000) == 3
+        b = dual_constraint_batch_size(
+            48_000, m_mem=150_000, m_comp=48_000.0**2, p=2.0
+        )
+        assert b == 1
+
+    def test_short_seq_memory_bound(self):
+        # short sequences are governed by the memory limit (paper §3.2)
+        b = dual_constraint_batch_size(1_000, m_mem=100_000, m_comp=1e10, p=2.0)
+        assert b == 100
+
+    @given(
+        s=st.integers(16, 200_000),
+        m_mem=st.floats(1e3, 1e6),
+        m_comp=st.floats(1e6, 1e12),
+        p=st.floats(1.6, 2.4),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_invariants(self, s, m_mem, m_comp, p):
+        b = dual_constraint_batch_size(s, m_mem=m_mem, m_comp=m_comp, p=p)
+        assert b >= 1
+        # if above the floor, both constraints hold
+        if b > 1:
+            assert b * s <= m_mem
+            assert b * s**p <= m_comp
+        # never exceeds the equal-token batch
+        assert b <= equal_token_batch_size(s, m_mem=m_mem)
+
+    @given(
+        m_mem=st.floats(1e4, 1e6),
+        m_comp=st.floats(1e7, 1e11),
+        p=st.floats(1.6, 2.4),
+        s1=st.integers(16, 100_000),
+        s2=st.integers(16, 100_000),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_monotone_in_seq_len(self, m_mem, m_comp, p, s1, s2):
+        lo, hi = min(s1, s2), max(s1, s2)
+        b_lo = dual_constraint_batch_size(lo, m_mem=m_mem, m_comp=m_comp, p=p)
+        b_hi = dual_constraint_batch_size(hi, m_mem=m_mem, m_comp=m_comp, p=p)
+        assert b_hi <= b_lo
+
+    @given(s=st.integers(1000, 100_000), p=st.floats(1.6, 2.4))
+    @settings(max_examples=100, deadline=None)
+    def test_load_flattening(self, s, p):
+        """When the compute constraint binds (above floor), per-bucket load
+        lands within one sample of M_comp — the flattening that kills the
+        long-tail (paper §4.3)."""
+        m_comp = 5.0 * s**p  # B around 5
+        b = dual_constraint_batch_size(s, m_mem=1e12, m_comp=m_comp, p=p)
+        eps = 1e-9  # fp tolerance on the floor boundary
+        assert b * s**p <= m_comp * (1 + eps)
+        assert m_comp < (b + 1) * s**p * (1 + eps)
+
+
+class TestPolicy:
+    def test_adaptive_flattens_loads(self):
+        shapes = [DataShape(1, 480, 832, 77), DataShape(33, 480, 832, 77),
+                  DataShape(97, 720, 1280, 77)]
+        smax = max(s.seq_len for s in shapes)
+        base = BucketingPolicy(m_mem=150_000, mode="equal_token")
+        ada = BucketingPolicy(m_mem=150_000, m_comp=float(smax) ** 2, p=2.0)
+        cv_base = load_statistics(base.make_buckets(shapes))["cv"]
+        cv_ada = load_statistics(ada.make_buckets(shapes))["cv"]
+        assert cv_ada < cv_base
+
+    def test_bad_mode(self):
+        with pytest.raises(ValueError):
+            BucketingPolicy(m_mem=1e5, mode="nope").batch_size(100)
+
+    def test_bucket_load(self):
+        b = Bucket(DataShape(1, 160, 160, 0), 4)
+        assert b.load(2.0) == 4 * b.seq_len**2

@@ -1,0 +1,93 @@
+"""Cost-model fitting: recovery, inversion, correlation machinery."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import (
+    BenchSample,
+    CostModel,
+    correlation_report,
+    fit_cost_model,
+    pearson,
+)
+
+
+def _synth(a, b, p, cells, noise=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for bsz, s in cells:
+        t = a + b * bsz * s**p
+        if noise:
+            t *= rng.lognormal(0, noise)
+        out.append(BenchSample(bsz, s, t))
+    return out
+
+
+CELLS = [(b, s) for s in (2048, 8192, 20_000, 32_768, 49_152) for b in (1, 2, 4, 8)]
+
+
+@given(
+    a=st.floats(0.01, 2.0),
+    b=st.floats(1e-9, 1e-7),
+    p=st.sampled_from([1.6, 1.8, 2.0, 2.2, 2.4]),
+)
+@settings(max_examples=40, deadline=None)
+def test_fit_recovers_exponent(a, b, p):
+    model = fit_cost_model(_synth(a, b, p, CELLS))
+    assert model.p == pytest.approx(p, abs=0.021)
+    assert model.r2 > 0.999
+    assert model.a == pytest.approx(a, rel=0.2, abs=0.05)
+
+
+def test_fit_with_noise_still_good():
+    model = fit_cost_model(_synth(0.2, 3e-8, 2.0, CELLS, noise=0.05))
+    assert model.r2 > 0.95
+    assert 1.8 <= model.p <= 2.2
+
+
+def test_m_comp_inversion():
+    model = CostModel(a=0.5, b=2e-8, p=2.0, r2=1.0)
+    target = 30.0
+    m_comp = model.m_comp_for_target(target)
+    # a bucket loaded exactly to M_comp hits the target latency
+    assert model.a + model.b * m_comp == pytest.approx(target)
+
+
+def test_m_comp_rejects_infeasible_target():
+    model = CostModel(a=5.0, b=1e-8, p=2.0, r2=1.0)
+    with pytest.raises(ValueError):
+        model.m_comp_for_target(4.0)
+
+
+def test_fit_needs_samples():
+    with pytest.raises(ValueError):
+        fit_cost_model(_synth(1, 1e-8, 2.0, CELLS[:2]))
+
+
+def test_pearson_bounds():
+    x = [1.0, 2.0, 3.0]
+    assert pearson(x, x) == pytest.approx(1.0)
+    assert pearson(x, [-v for v in x]) == pytest.approx(-1.0)
+    assert pearson(x, [5.0, 5.0, 5.0]) == 0.0
+
+
+def test_correlation_split_under_equal_token():
+    """Under equal-token loading, token count barely varies while B*S^p
+    tracks latency — the paper's 0.35-vs-0.92 observation."""
+    rng = np.random.default_rng(1)
+    samples = []
+    for s in (4000, 8000, 16000, 32000, 48000):
+        bsz = max(1, 150_000 // s)
+        t = 0.3 + 2e-9 * bsz * s**2
+        for _ in range(20):
+            samples.append(BenchSample(bsz, s, t * rng.lognormal(0, 0.05)))
+    rep = correlation_report(samples, 2.0)
+    assert abs(rep["corr_tokens"]) < 0.75
+    assert rep["corr_load_p"] > 0.9
+    assert rep["corr_load_p"] > abs(rep["corr_tokens"]) + 0.2
+
+
+def test_json_roundtrip():
+    m = CostModel(a=1.0, b=2e-8, p=2.0, r2=0.99, n_samples=10)
+    assert CostModel.from_json(m.to_json()) == m
