@@ -1,0 +1,18 @@
+# Self-documenting entry points.  `make test` is the tier-1 verify command.
+
+PYTHONPATH := src
+
+.PHONY: test bench bench-dispatch example
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+bench-dispatch:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only dispatch
+
+example:
+	PYTHONPATH=$(PYTHONPATH) python examples/train_wan_adaptiveload.py \
+		--steps 20 --workers 2 --dispatch lpt

@@ -15,6 +15,7 @@ import traceback
 SECTIONS = [
     ("cost_model", "paper §3.2: fit + correlation claims"),
     ("throughput", "paper Fig.5/6/7: throughput + CV, 8/16 workers"),
+    ("dispatch", "§4.5 global step-planning: independent vs random/LPT/knapsack"),
     ("adaln_kernel", "paper Table 2: fused AdaLN operator"),
     ("fusion_system", "paper Table 1: system-level fusion"),
     ("loss_convergence", "paper Fig.8: loss congruence"),
@@ -40,6 +41,8 @@ def main() -> None:
                 from . import bench_cost_model as m
             elif name == "throughput":
                 from . import bench_throughput as m
+            elif name == "dispatch":
+                from . import bench_dispatch as m
             elif name == "adaln_kernel":
                 from . import bench_adaln_kernel as m
             elif name == "fusion_system":

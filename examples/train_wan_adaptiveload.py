@@ -1,11 +1,14 @@
 """End-to-end driver: train a ~100M-parameter Wan-style MMDiT with the full
 AdaptiveLoad stack — bucketed mixed image/video stream, dual-constraint
-batch sizes, closed-loop scheduler, fault-tolerant checkpointing.
+batch sizes, global step-planned dispatch across emulated DP ranks,
+closed-loop scheduler, fault-tolerant checkpointing.
 
     PYTHONPATH=src python examples/train_wan_adaptiveload.py --steps 200
 
 (Defaults are CPU-sized: ~100M params, a few hundred steps, synthetic
-latents.  --steps 10 for a smoke run.)
+latents.  --steps 10 for a smoke run.  --workers 2 --dispatch lpt emulates
+two DP ranks fed from one global plan; --straggler 1.5 degrades the last
+rank to exercise the derate path.)
 """
 
 import argparse
@@ -24,7 +27,8 @@ from repro.core import (
     sweep_grid,
 )
 from repro.core.bucketing import DataShape
-from repro.data.pipeline import BucketedLoader
+from repro.core.dispatch import DISPATCH_STRATEGIES
+from repro.data.pipeline import ShardedBucketedLoader
 from repro.data.synthetic import make_diffusion_batch
 from repro.distributed.fault_tolerance import (
     CheckpointCadence,
@@ -42,7 +46,16 @@ def main() -> None:
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--ckpt-dir", default="/tmp/wan_adaptiveload_ckpt")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="emulated DP ranks fed from one global step plan")
+    ap.add_argument("--dispatch", default="lpt", choices=DISPATCH_STRATEGIES)
+    ap.add_argument("--straggler", type=float, default=1.0,
+                    help=">1: scale the last rank's recorded compute time "
+                         "to exercise the scheduler's derate path")
     args = ap.parse_args()
+    if args.straggler != 1.0 and args.workers < 2:
+        ap.error("--straggler needs --workers >= 2: straggler detection "
+                 "compares a rank against its peers on the same shapes")
 
     # ~100M-param Wan-style MMDiT (18 layers, d=512 -> 101M params)
     cfg = ModelConfig(
@@ -73,18 +86,24 @@ def main() -> None:
         SchedulerConfig(
             target_sync=model.predict(2, max(s.seq_len for s in shapes)),
             m_mem=2048.0, refit_interval=50, min_samples=64, r2_floor=0.5,
+            dispatch=args.dispatch,
         ),
-        shapes, initial_model=model, n_workers=1,
+        shapes, initial_model=model, n_workers=args.workers,
     )
+    planner = sched.make_planner(seed=0)
     print(sched.describe())
 
     def make_batch(rng: np.random.Generator, bucket):
         key = jax.random.PRNGKey(int(rng.integers(2**31)))
         return make_diffusion_batch(key, bucket.batch_size, bucket.seq_len, cfg)
 
-    loader = BucketedLoader(
+    # one global plan per step, fanned out to per-rank queues; the loader
+    # shares the scheduler's planner (which carries buckets, budget, and
+    # the dispatch strategy), so every replan (refit, derate, resize)
+    # reaches dispatch with no manual plumbing
+    loader = ShardedBucketedLoader(
         sched.buckets, None, make_batch,
-        budget=float(sched.policy.m_comp), budget_of=lambda b: b.load(sched.model.p),
+        n_workers=args.workers, planner=planner,
     )
 
     ft = FaultTolerantRunner(
@@ -101,12 +120,32 @@ def main() -> None:
         state = store.restore(args.ckpt_dir, state)
         print(f"resumed from step {store.latest_step(args.ckpt_dir)}")
 
-    trainer = Trainer(cfg, opt, scheduler=sched, ft=ft)
-    state, hist = trainer.run(state, iter(loader), args.steps, log_every=20)
+    scale = (
+        {args.workers - 1: args.straggler} if args.straggler != 1.0 else None
+    )
+    trainer = Trainer(cfg, opt, scheduler=sched, ft=ft, worker_time_scale=scale)
+
+    seen_updates = 0
+
+    def log_plan_updates(step: int, metrics: dict) -> None:
+        # replans reach the shared planner automatically; just narrate them
+        nonlocal seen_updates
+        if len(sched.updates) > seen_updates:
+            seen_updates = len(sched.updates)
+            print(f"  [plan update @ step {step}] {sched.updates[-1].reason}")
+
+    state, hist = trainer.run(
+        state, iter(loader), args.steps, log_every=20, on_metrics=log_plan_updates
+    )
     loader.close()
     store.save(state, args.steps, args.ckpt_dir)
 
-    print(f"\nfinal loss {hist.losses[-1]:.4f} "
+    plans = loader.plans
+    if plans:
+        mean_plan_cv = float(np.mean([p.compute_cv() for p in plans]))
+        print(f"\ndispatch ({args.dispatch}): mean planned compute-CV "
+              f"{mean_plan_cv:.3f} over {len(plans)} recent plans")
+    print(f"final loss {hist.losses[-1]:.4f} "
           f"(first {hist.losses[0]:.4f}); throughput {hist.throughput:,.0f} tok/s")
     print(f"scheduler after training: {sched.describe()}")
     print(f"events: {hist.events}")

@@ -5,6 +5,7 @@ Layer map (paper section -> module):
   §3.2 cost model a + b·B·S^p, p grid     -> cost_model
   §3.2 Shape Benchmark / Throughput Sweep -> shape_bench
   §4.3 CV metrics + LPT re-alignment      -> balancer
+  §4.5 global step-level dispatch         -> dispatch
   Eq.1 T_sync = max_i T_i cluster model   -> simulator
   §3.2 closed loop (telemetry->replan)    -> scheduler, telemetry
 """
@@ -40,7 +41,21 @@ from .shape_bench import (
     run_measured_benchmark,
     sweep_grid,
 )
-from .simulator import CorpusSampler, SimulationResult, simulate, simulate_packed
+from .dispatch import (
+    DISPATCH_STRATEGIES,
+    StepPlan,
+    StepPlanner,
+    assign_pool,
+    normalized_weights,
+    refine_swaps,
+)
+from .simulator import (
+    CorpusSampler,
+    SimulationResult,
+    simulate,
+    simulate_packed,
+    simulate_planned,
+)
 from .scheduler import AdaptiveLoadScheduler, SchedulerConfig
 from .telemetry import BottleneckReport, TelemetryBuffer, WorkerStepRecord
 
@@ -68,10 +83,17 @@ __all__ = [
     "run_analytic_benchmark",
     "run_measured_benchmark",
     "sweep_grid",
+    "DISPATCH_STRATEGIES",
+    "StepPlan",
+    "StepPlanner",
+    "assign_pool",
+    "normalized_weights",
+    "refine_swaps",
     "CorpusSampler",
     "SimulationResult",
     "simulate",
     "simulate_packed",
+    "simulate_planned",
     "AdaptiveLoadScheduler",
     "SchedulerConfig",
     "BottleneckReport",

@@ -14,6 +14,10 @@ Assignment strategies:
 * ``assign_lpt`` — greedy Longest-Processing-Time bin packing of the step's
   microbatches to workers ("intra-step re-alignment of sequences", §4.5);
   used when a step carries several microbatches per worker.
+
+These are the packing *primitives*; the cluster-level engine that draws a
+global per-step pool and applies them (plus a knapsack-style swap
+refinement) lives in ``repro.core.dispatch``.
 """
 
 from __future__ import annotations

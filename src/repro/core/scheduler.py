@@ -13,7 +13,10 @@ plus the operational concerns a real cluster adds:
   trigger either an alert or an automatic compute-budget derate so the
   barrier stops latching on the sick worker,
 * **recalibration hysteresis** — the model is only swapped when the refit
-  improves R² or shifts p materially, avoiding plan thrash.
+  improves R² or shifts p materially, avoiding plan thrash,
+* **global dispatch** — an attached ``StepPlanner`` (``make_planner()``)
+  receives every replan, so cluster-level microbatch dispatch (§4.5) tracks
+  refits, derates, and elastic resizes without draining the pipeline.
 """
 
 from __future__ import annotations
@@ -23,6 +26,7 @@ from typing import Sequence
 
 from .bucketing import Bucket, BucketingPolicy, DataShape
 from .cost_model import CostModel, fit_cost_model
+from .dispatch import DISPATCH_STRATEGIES, StepPlanner
 from .telemetry import TelemetryBuffer, WorkerStepRecord
 
 
@@ -36,6 +40,14 @@ class SchedulerConfig:
     r2_floor: float = 0.80  # refuse models that explain the data poorly
     straggler_threshold: float = 1.25
     straggler_derate: float = 0.9  # M_comp multiplier while a straggler persists
+    dispatch: str = "lpt"  # step-level microbatch dispatch strategy (§4.5)
+
+    def __post_init__(self) -> None:
+        if self.dispatch not in DISPATCH_STRATEGIES:
+            raise ValueError(
+                f"unknown dispatch strategy {self.dispatch!r}; expected one "
+                f"of {DISPATCH_STRATEGIES}"
+            )
 
 
 @dataclasses.dataclass
@@ -45,6 +57,8 @@ class PlanUpdate:
     model: CostModel
     m_comp: float
     buckets: list[Bucket]
+    dispatch: str = "lpt"
+    n_workers: int = 0
 
 
 class AdaptiveLoadScheduler:
@@ -66,6 +80,8 @@ class AdaptiveLoadScheduler:
         self._derate = 1.0
         self.updates: list[PlanUpdate] = []
         self._steps_seen = 0
+        self.planner: StepPlanner | None = None
+        self._planner_accumulation = 1.0
         self.policy = self._policy_from_model(initial_model)
         self.buckets = self.policy.make_buckets(self.shapes)
 
@@ -82,8 +98,41 @@ class AdaptiveLoadScheduler:
         self.policy = self._policy_from_model(model)
         self.buckets = self.policy.make_buckets(self.shapes)
         self.updates.append(
-            PlanUpdate(step, reason, model, self.policy.m_comp, list(self.buckets))
+            PlanUpdate(
+                step, reason, model, self.policy.m_comp, list(self.buckets),
+                dispatch=self.config.dispatch, n_workers=self.n_workers,
+            )
         )
+        if self.planner is not None:
+            p = model.p
+            self.planner.update(
+                buckets=self.buckets,
+                budget=self.policy.m_comp * self._planner_accumulation,
+                budget_of=lambda b: b.load(p),
+                n_workers=self.n_workers,
+            )
+
+    def make_planner(
+        self, *, seed: int = 0, accumulation: float = 1.0
+    ) -> StepPlanner:
+        """Build (and attach) the global dispatcher for the current plan.
+
+        ``accumulation`` scales the per-rank step budget in units of
+        ``M_comp`` (gradient-accumulation factor).  Once attached, every
+        subsequent replan — refit, straggler derate, elastic ``resize()`` —
+        is pushed into the planner, so dispatch follows the closed loop.
+        """
+        p = self.model.p
+        self._planner_accumulation = accumulation
+        self.planner = StepPlanner(
+            self.buckets,
+            n_workers=self.n_workers,
+            budget=self.policy.m_comp * accumulation,
+            budget_of=lambda b: b.load(p),
+            strategy=self.config.dispatch,
+            seed=seed,
+        )
+        return self.planner
 
     # -- the loop -----------------------------------------------------------
 
@@ -157,5 +206,7 @@ class AdaptiveLoadScheduler:
             f"AdaptiveLoadScheduler(workers={self.n_workers}, "
             f"p={self.model.p:.2f}, R2={self.model.r2:.3f}, "
             f"M_comp={self.policy.m_comp:.3e}, M_mem={self.config.m_mem:.3e}, "
+            f"dispatch={self.config.dispatch}"
+            f"{' [planner attached]' if self.planner is not None else ''}, "
             f"bottleneck={bn.verdict}, updates={len(self.updates)})"
         )

@@ -9,6 +9,14 @@ hardware jitter.
 The simulator is policy-agnostic: feed it buckets built with
 ``mode='equal_token'`` for the baseline and ``mode='adaptive'`` for
 AdaptiveLoad, and compare the emitted ``StepMetrics`` streams.
+
+Three dispatch regimes are modeled:
+
+* ``simulate``         — one microbatch per worker per step, independent draws.
+* ``simulate_packed``  — gradient accumulation, each worker draws to its own
+  budget independently (the sharded-iterator status quo).
+* ``simulate_planned`` — the §4.5 global regime: a ``StepPlanner`` draws one
+  cluster-wide pool and packs it across ranks (random/LPT/knapsack).
 """
 
 from __future__ import annotations
@@ -20,6 +28,7 @@ import numpy as np
 
 from .balancer import StepMetrics, step_metrics
 from .bucketing import Bucket
+from .dispatch import StepPlanner
 
 
 @dataclasses.dataclass
@@ -128,6 +137,63 @@ def simulate_packed(
             times.append(t_w)
             loads.append(o_w)
         out.append(step_metrics(times, loads, tokens))
+    return SimulationResult(out)
+
+
+def simulate_planned(
+    sampler: CorpusSampler,
+    n_workers: int,
+    n_steps: int,
+    cost_fn: Callable[[int, int], float],
+    *,
+    budget: float,
+    budget_of: Callable[[Bucket], float],
+    strategy: str = "lpt",
+    load_of: Callable[[Bucket], float] | None = None,
+    p: float = 2.0,
+    jitter: float = 0.03,
+    seed: int = 0,
+    straggler_worker: int | None = None,
+    straggler_slowdown: float = 1.0,
+) -> SimulationResult:
+    """Planner-driven regime (§4.5): ONE global pool per optimizer step,
+    drawn to the cluster budget ``n_workers * budget`` and packed across
+    ranks by ``load_of`` (default: quadratic load ``B*S^p``).
+
+    The apples-to-apples counterpart of :func:`simulate_packed` — same
+    corpus, same cost function, same per-rank budget — isolating the value
+    of global dispatch vs independent per-worker draws.  ``strategy`` is
+    any of ``repro.core.dispatch.DISPATCH_STRATEGIES``; ``random`` deals
+    the same pool round-robin and serves as the sanity baseline.
+    """
+    planner = StepPlanner(
+        sampler.buckets,
+        sampler.weights,
+        n_workers=n_workers,
+        budget=budget,
+        budget_of=budget_of,
+        load_of=load_of if load_of is not None else (lambda b: b.load(p)),
+        strategy=strategy,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed + 1)  # jitter stream, decoupled from draws
+    out: list[StepMetrics] = []
+    for _ in range(n_steps):
+        plan = planner.plan()
+        times, loads = [], []
+        for w in range(n_workers):
+            t_w, o_w = 0.0, 0.0
+            for b in plan.worker_microbatches(w):
+                t = cost_fn(b.batch_size, b.seq_len)
+                if jitter > 0:
+                    t *= float(rng.lognormal(0.0, jitter))
+                t_w += t
+                o_w += b.load(p)
+            if straggler_worker is not None and w == straggler_worker:
+                t_w *= straggler_slowdown
+            times.append(t_w)
+            loads.append(o_w)
+        out.append(step_metrics(times, loads, plan.tokens))
     return SimulationResult(out)
 
 

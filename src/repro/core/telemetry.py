@@ -82,16 +82,47 @@ class TelemetryBuffer:
     def straggler_workers(
         self, *, window: int = 64, threshold: float = 1.25
     ) -> list[int]:
-        """Workers whose median compute time exceeds threshold x cluster
-        median over the trailing window — persistent hardware stragglers,
-        as opposed to data-induced imbalance (which moves between workers)."""
+        """Workers whose median *shape-normalized* compute time exceeds
+        threshold x the cluster median over the trailing window.
+
+        Each record's time is divided by the *peer* median for its own
+        (B, S) cell — the median over every OTHER worker's samples of that
+        shape — before comparing workers.  Raw times would confound
+        hardware health with dispatch (LPT-style packing systematically
+        hands the heaviest microbatch of every step to one rank), and an
+        all-workers median would let the straggler contaminate its own
+        baseline: at 2 workers half of each cell's samples are the sick
+        rank's, which pulls the median up and hides slowdowns below
+        ~2x threshold - 1.  Leave-one-out medians keep the baseline honest
+        at any worker count.  Shapes only one worker has seen are skipped
+        (no peer baseline to compare against)."""
         recent = list(self._records)[-window * 16 :]
         if not recent:
             return []
-        by_worker: dict[int, list[float]] = {}
+        by_shape_worker: dict[tuple[int, int], dict[int, list[float]]] = {}
         for r in recent:
-            by_worker.setdefault(r.worker, []).append(r.compute_time)
-        med_all = float(np.median([r.compute_time for r in recent]))
+            by_shape_worker.setdefault((r.batch_size, r.seq_len), {}).setdefault(
+                r.worker, []
+            ).append(r.compute_time)
+        by_worker: dict[int, list[float]] = {}
+        ratios: list[float] = []
+        for shape, per_worker in by_shape_worker.items():
+            if len(per_worker) < 2:
+                continue  # single-worker shape: no peers to normalize by
+            for w, ts in per_worker.items():
+                peers = [
+                    t for pw, pts in per_worker.items() if pw != w for t in pts
+                ]
+                m = float(np.median(peers))
+                if m <= 0:
+                    continue
+                for t in ts:
+                    ratio = t / m
+                    by_worker.setdefault(w, []).append(ratio)
+                    ratios.append(ratio)
+        if not ratios:
+            return []
+        med_all = float(np.median(ratios))
         if med_all <= 0:
             return []
         return sorted(

@@ -1,9 +1,16 @@
 """Bucketed data pipeline: the paper's Fig. 2 dataloader.
 
-``BucketedLoader`` drives one data-parallel worker's stream:
+``BucketedLoader`` drives ONE data-parallel worker's stream:
 
   shape corpus -> bucket draw -> (B_shape, S) microbatch -> accumulate to the
   step budget (tokens for the baseline, fitted B*S^p load for AdaptiveLoad)
+
+``ShardedBucketedLoader`` drives ALL workers from one global dispatch
+decision: a single prefetch thread asks a ``StepPlanner`` for each step's
+cluster-wide plan (§4.5 intra-step re-alignment), materializes the plan's
+microbatches once, and fans them out to per-rank queues — so rank streams
+are never independent draws and step-level load balance survives all the
+way to the devices.
 
 A background prefetch thread keeps ``prefetch`` steps of synthetic batches
 ready so device steps never wait on the host (the paper's shape benchmark
@@ -16,11 +23,13 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Sequence
+from collections import deque
+from typing import Callable, Deque, Iterator, Sequence
 
 import numpy as np
 
 from repro.core.bucketing import Bucket
+from repro.core.dispatch import StepPlan, StepPlanner, normalized_weights
 
 
 class BucketedLoader:
@@ -37,8 +46,7 @@ class BucketedLoader:
     ):
         self._lock = threading.Lock()
         self._buckets = list(buckets)
-        w = np.asarray(weights if weights is not None else [1.0] * len(buckets))
-        self._probs = w / w.sum()
+        self._probs = normalized_weights(self._buckets, weights)
         self._make_batch = make_batch
         self.budget = budget
         self.budget_of = budget_of
@@ -57,10 +65,10 @@ class BucketedLoader:
         budget: float,
         weights: Sequence[float] | None = None,
     ) -> None:
+        probs = normalized_weights(list(buckets), weights)
         with self._lock:
             self._buckets = list(buckets)
-            w = np.asarray(weights if weights is not None else [1.0] * len(buckets))
-            self._probs = w / w.sum()
+            self._probs = probs
             self.budget = budget
 
     # -- producer -------------------------------------------------------------
@@ -101,6 +109,8 @@ class BucketedLoader:
             try:
                 return self._q.get(timeout=0.5)
             except queue.Empty:
+                if self._stop.is_set():  # closed: end the stream
+                    raise StopIteration
                 continue
 
     def close(self) -> None:
@@ -110,4 +120,195 @@ class BucketedLoader:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        self._thread.join(timeout=2.0)
+
+
+WorkerStep = list[tuple[Bucket, dict]]  # one rank's microbatches for one step
+
+
+class ShardedBucketedLoader:
+    """Planner-driven multi-rank loader: one global dispatch decision per
+    optimizer step, materialized into per-rank streams.
+
+    A single prefetch thread calls ``StepPlanner.plan()``, builds every
+    microbatch in the plan once, and pushes each rank's share onto that
+    rank's queue.  Two consumption modes (pick one per loader):
+
+    * ``next(loader)`` — the whole step, ``list[WorkerStep]`` indexed by
+      rank; used by the host-side ``Trainer`` that emulates all DP ranks.
+    * ``worker_iter(w)`` — rank ``w``'s stream only; what a real per-host
+      data service would expose.  Ranks stay in lockstep because the
+      producer always pushes complete plans — so EVERY rank needs a
+      concurrent consumer.  Draining one rank's queue alone stalls after
+      ``prefetch`` steps: the other ranks' queues fill, the producer
+      blocks, and no further plans are emitted until they're drained or
+      the loader is closed.
+
+    ``plan_update()`` mirrors ``BucketedLoader`` so the closed-loop
+    scheduler can swap bucket tables/budgets mid-training; alternatively,
+    pass the scheduler's own planner (``planner=sched.make_planner()``) and
+    every scheduler replan reaches dispatch with no manual plumbing.
+    Changing the worker count requires a new loader (queue fan-out is fixed
+    at construction); on elastic resize the launcher rebuilds the loader
+    from the scheduler's re-emitted plan — a resized shared planner makes
+    the producer fail loudly rather than mis-shard.
+    """
+
+    def __init__(
+        self,
+        buckets: Sequence[Bucket],
+        weights: Sequence[float] | None,
+        make_batch: Callable[[np.random.Generator, Bucket], dict],
+        *,
+        n_workers: int,
+        budget: float | None = None,
+        budget_of: Callable[[Bucket], float] | None = None,
+        load_of: Callable[[Bucket], float] | None = None,
+        strategy: str | None = None,
+        seed: int = 0,
+        prefetch: int = 2,
+        planner: StepPlanner | None = None,
+    ):
+        self.n_workers = n_workers
+        if planner is not None:
+            # the planner already defines the plan; conflicting args would
+            # silently lose, so refuse them outright
+            if (weights is not None or budget is not None
+                    or budget_of is not None or load_of is not None
+                    or strategy is not None):
+                raise ValueError(
+                    "pass either planner= or the plan-defining args "
+                    "(weights/budget/budget_of/load_of/strategy), not both"
+                )
+            if list(buckets) != planner.buckets:
+                raise ValueError(
+                    "buckets passed alongside planner= differ from the "
+                    "planner's own table; they would be silently ignored"
+                )
+            if planner.n_workers != n_workers:
+                raise ValueError(
+                    f"shared planner is sized for {planner.n_workers} "
+                    f"workers, loader for {n_workers}"
+                )
+            self._planner = planner
+        else:
+            if budget is None or budget_of is None:
+                raise ValueError(
+                    "budget and budget_of are required without planner="
+                )
+            self._planner = StepPlanner(
+                buckets,
+                weights,
+                n_workers=n_workers,
+                budget=budget,
+                budget_of=budget_of,
+                load_of=load_of,
+                strategy=strategy if strategy is not None else "lpt",
+                seed=seed,
+            )
+        self._make_batch = make_batch
+        self._rng = np.random.default_rng(seed + 1)
+        self._queues: list[queue.Queue] = [
+            queue.Queue(maxsize=max(prefetch, 1)) for _ in range(n_workers)
+        ]
+        self._plans: Deque[StepPlan] = deque(maxlen=256)
+        self._stop = threading.Event()
+        self._error: Exception | None = None
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    @property
+    def planner(self) -> StepPlanner:
+        return self._planner
+
+    @property
+    def plans(self) -> list[StepPlan]:
+        """Dispatch decisions emitted so far (telemetry/debugging)."""
+        return list(self._plans)
+
+    # -- plan updates from the closed-loop scheduler -------------------------
+
+    def plan_update(
+        self,
+        buckets: Sequence[Bucket],
+        budget: float,
+        weights: Sequence[float] | None = None,
+    ) -> None:
+        self._planner.update(buckets=list(buckets), weights=weights, budget=budget)
+
+    # -- producer -------------------------------------------------------------
+
+    def _materialize(self, plan: StepPlan) -> list[WorkerStep]:
+        batches = [self._make_batch(self._rng, b) for b in plan.microbatches]
+        return [
+            [(plan.microbatches[i], batches[i]) for i in plan.assignments[w]]
+            for w in range(plan.n_workers)
+        ]
+
+    def _put(self, q: queue.Queue, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set():
+                plan = self._planner.plan()
+                if plan.n_workers != len(self._queues):
+                    raise RuntimeError(
+                        f"planner resized to {plan.n_workers} workers but "
+                        f"this loader fans out to {len(self._queues)} "
+                        f"queues; rebuild the ShardedBucketedLoader"
+                    )
+                per_rank = self._materialize(plan)
+                self._plans.append(plan)
+                for w, step in enumerate(per_rank):
+                    if not self._put(self._queues[w], step):
+                        return
+        except Exception as e:  # noqa: BLE001 — surface to the consumer
+            self._error = e
+
+    # -- consumers -------------------------------------------------------------
+
+    def _get(self, q: queue.Queue) -> WorkerStep:
+        while True:
+            if self._error is not None:
+                raise RuntimeError("sharded loader producer failed") from self._error
+            try:
+                return q.get(timeout=0.5)
+            except queue.Empty:
+                if self._stop.is_set():  # closed: end the stream
+                    raise StopIteration
+                continue
+
+    def __iter__(self) -> Iterator[list[WorkerStep]]:
+        return self
+
+    def __next__(self) -> list[WorkerStep]:
+        """One full step: every rank's microbatches, same plan."""
+        return [self._get(q) for q in self._queues]
+
+    def worker_iter(self, worker: int) -> Iterator[WorkerStep]:
+        """Rank ``worker``'s stream of per-step microbatch lists."""
+        if not 0 <= worker < self.n_workers:
+            raise ValueError(f"worker {worker} out of range [0, {self.n_workers})")
+        while True:
+            try:
+                step = self._get(self._queues[worker])
+            except StopIteration:  # PEP 479: end the generator explicitly
+                return
+            yield step
+
+    def close(self) -> None:
+        self._stop.set()
+        for q in self._queues:
+            try:
+                while True:
+                    q.get_nowait()
+            except queue.Empty:
+                pass
         self._thread.join(timeout=2.0)

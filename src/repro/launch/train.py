@@ -24,7 +24,8 @@ from repro.core import (
     fit_cost_model,
 )
 from repro.core.bucketing import BucketingPolicy, DataShape
-from repro.data.pipeline import BucketedLoader
+from repro.core.dispatch import DISPATCH_STRATEGIES
+from repro.data.pipeline import BucketedLoader, ShardedBucketedLoader
 from repro.data.synthetic import make_diffusion_batch, make_lm_batch
 from repro.distributed.fault_tolerance import (
     CheckpointCadence,
@@ -48,7 +49,14 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--adaptive", action="store_true",
                     help="bucketed AdaptiveLoad data (variable shapes)")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="emulated DP ranks fed from one global step plan")
+    ap.add_argument("--dispatch", default="lpt", choices=DISPATCH_STRATEGIES,
+                    help="step-level microbatch dispatch strategy (§4.5)")
     args = ap.parse_args()
+    if args.workers > 1 and not args.adaptive:
+        ap.error("--workers > 1 requires --adaptive (the fixed-shape stream "
+                 "has no planner to shard)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -69,10 +77,10 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     if args.adaptive:
-        # variable-shape bucketed stream with the dual constraint
-        shapes = [DataShape(1, 64, 64, 0, ), DataShape(9, 64, 64, 0)]
-        shapes = [DataShape(1, 256, 256, 16), DataShape(9, 256, 256, 16),
-                  DataShape(17, 256, 256, 16)]
+        # variable-shape bucketed stream with the dual constraint; seq lens
+        # stay <= 512 so LM archs fit a single softmax-xent chunk
+        shapes = [DataShape(1, 256, 256, 16), DataShape(9, 192, 192, 16),
+                  DataShape(17, 192, 192, 16)]
         policy = BucketingPolicy(m_mem=args.batch * 1024, m_comp=2.0e7, p=2.0)
         buckets = policy.make_buckets(shapes)
     else:
@@ -89,11 +97,23 @@ def main() -> None:
         return make_lm_batch(key, b, s, cfg.vocab, cfg)
 
     if buckets is not None:
-        loader = BucketedLoader(
-            buckets, None, make_batch,
-            budget=float(args.batch * args.seq),
-            budget_of=lambda b: float(b.tokens),
-        )
+        if args.workers > 1:
+            # global step plan: one pool per step, packed across ranks by
+            # quadratic load, instead of independent per-rank draws
+            loader = ShardedBucketedLoader(
+                buckets, None, make_batch,
+                n_workers=args.workers,
+                budget=float(args.batch * args.seq),
+                budget_of=lambda b: float(b.tokens),
+                load_of=lambda b: b.load(policy.p),
+                strategy=args.dispatch,
+            )
+        else:
+            loader = BucketedLoader(
+                buckets, None, make_batch,
+                budget=float(args.batch * args.seq),
+                budget_of=lambda b: float(b.tokens),
+            )
         data_iter = iter(loader)
     else:
         class _Fixed:
@@ -117,6 +137,8 @@ def main() -> None:
     state, hist = trainer.run(
         state, data_iter, args.steps, rng=jax.random.PRNGKey(1), log_every=10
     )
+    if buckets is not None:
+        loader.close()
     print(
         f"done: {args.steps} steps, final loss {hist.losses[-1]:.4f}, "
         f"throughput {hist.throughput:,.0f} tok/s, events={hist.events}"

@@ -5,16 +5,24 @@ The loop is bucket-shape-aware: jitted step functions are cached per
 steady state pays zero retrace.  Per-step telemetry feeds the AdaptiveLoad
 scheduler, which may replan buckets; plan updates propagate to the loader
 without draining it.
+
+The loop consumes either a single-rank stream (``BucketedLoader``: each
+item is one ``list[(bucket, batch)]``) or a planner-driven multi-rank
+stream (``ShardedBucketedLoader``: each item is per-worker lists from one
+global dispatch decision).  In the multi-rank case this host emulates every
+DP rank serially, but telemetry is recorded **per worker and per
+microbatch** — each microbatch is timed individually (``float(loss)``
+blocks on the device), so the cost-model refit sees honest ``(B, S, t)``
+pairs and ``straggler_workers()`` sees every rank, not just worker 0.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Mapping
 
 import jax
-import numpy as np
 
 from repro.core.scheduler import AdaptiveLoadScheduler
 from repro.core.telemetry import WorkerStepRecord
@@ -47,6 +55,7 @@ class Trainer:
         scheduler: AdaptiveLoadScheduler | None = None,
         ft: FaultTolerantRunner | None = None,
         donate: bool = True,
+        worker_time_scale: Mapping[int, float] | None = None,
     ):
         self.cfg = cfg
         self.opt = opt
@@ -56,14 +65,34 @@ class Trainer:
         self._step_fn = make_train_step(cfg, opt, policy)
         self._jitted: dict[tuple, Callable] = {}
         self._donate = donate
+        # Emulation knob: when one host plays every DP rank, scale rank w's
+        # *recorded* compute time to model degraded hardware — lets tests and
+        # examples exercise the scheduler's straggler path end to end.
+        self._worker_time_scale = dict(worker_time_scale or {})
 
-    def _jit_for(self, batch) -> Callable:
+    def _jit_for(self, batch) -> tuple[Callable, bool]:
+        """Returns the jitted step fn and whether this signature is fresh
+        (first call pays the compile, so its timing must not enter
+        telemetry — a compile-poisoned sample skews the cost-model refit
+        and can flag whichever worker compiles first as a straggler)."""
         sig = tuple(sorted((k, v.shape, str(v.dtype)) for k, v in batch.items()))
-        if sig not in self._jitted:
+        fresh = sig not in self._jitted
+        if fresh:
             self._jitted[sig] = jax.jit(
                 self._step_fn, donate_argnums=(0,) if self._donate else ()
             )
-        return self._jitted[sig]
+        return self._jitted[sig], fresh
+
+    @staticmethod
+    def _as_worker_steps(step) -> list[list[tuple[Any, Any]]]:
+        """Normalize a data item to per-worker microbatch lists.
+
+        ``BucketedLoader`` yields ``[(bucket, batch), ...]`` (one rank);
+        ``ShardedBucketedLoader`` yields ``[[(bucket, batch), ...], ...]``
+        (one list per rank)."""
+        if step and isinstance(step[0], list):
+            return step
+        return [step]
 
     def run(
         self,
@@ -78,31 +107,37 @@ class Trainer:
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         hist = TrainHistory()
         for i in range(n_steps):
-            step_batches = next(data_iter)
+            worker_steps = self._as_worker_steps(next(data_iter))
             t0 = time.perf_counter()
-            loss_acc, tok = 0.0, 0
-            for bucket, batch in step_batches:  # accumulation microbatches
-                rng, sub = jax.random.split(rng)
-                fn = self._jit_for(batch)
-                state, metrics = fn(state, batch, sub)
-                loss_acc += float(metrics["loss"])
-                tok += bucket.tokens
+            loss_acc, tok, n_micro = 0.0, 0, 0
+            recs: list[WorkerStepRecord] = []
+            for w, step_batches in enumerate(worker_steps):
+                scale = self._worker_time_scale.get(w, 1.0)
+                for bucket, batch in step_batches:  # accumulation microbatches
+                    rng, sub = jax.random.split(rng)
+                    fn, fresh = self._jit_for(batch)
+                    tb = time.perf_counter()
+                    state, metrics = fn(state, batch, sub)
+                    loss_acc += float(metrics["loss"])  # blocks on device
+                    mb_dt = time.perf_counter() - tb
+                    if not fresh:  # compile steps don't enter telemetry
+                        recs.append(
+                            WorkerStepRecord(
+                                step=i, worker=w,
+                                batch_size=bucket.batch_size, seq_len=bucket.seq_len,
+                                compute_time=mb_dt * scale,
+                            )
+                        )
+                    tok += bucket.tokens
+                    n_micro += 1
             jax.block_until_ready(state["step"])
             dt = time.perf_counter() - t0
 
-            hist.losses.append(loss_acc / max(len(step_batches), 1))
+            hist.losses.append(loss_acc / max(n_micro, 1))
             hist.step_times.append(dt)
             hist.tokens.append(tok)
 
             if self.scheduler is not None:
-                recs = [
-                    WorkerStepRecord(
-                        step=i, worker=0,
-                        batch_size=b.batch_size, seq_len=b.seq_len,
-                        compute_time=dt / max(len(step_batches), 1),
-                    )
-                    for b, _ in step_batches
-                ]
                 self.scheduler.observe(recs)
 
             if self.ft is not None:
@@ -117,6 +152,7 @@ class Trainer:
             if log_every and i % log_every == 0:
                 print(
                     f"step {i:5d}  loss {hist.losses[-1]:.4f}  "
-                    f"{tok/dt:,.0f} tok/s  ({len(step_batches)} microbatches)"
+                    f"{tok/dt:,.0f} tok/s  ({n_micro} microbatches, "
+                    f"{len(worker_steps)} ranks)"
                 )
         return state, hist
