@@ -2,7 +2,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test bench bench-dispatch example
+.PHONY: test bench bench-dispatch bench-attn example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -12,6 +12,9 @@ bench:
 
 bench-dispatch:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only dispatch
+
+bench-attn:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention
 
 example:
 	PYTHONPATH=$(PYTHONPATH) python examples/train_wan_adaptiveload.py \

@@ -17,6 +17,7 @@ SECTIONS = [
     ("throughput", "paper Fig.5/6/7: throughput + CV, 8/16 workers"),
     ("dispatch", "§4.5 global step-planning: independent vs random/LPT/knapsack"),
     ("adaln_kernel", "paper Table 2: fused AdaLN operator"),
+    ("attention", "segment-aware flash attention: tile skip + fwd/bwd walltime"),
     ("fusion_system", "paper Table 1: system-level fusion"),
     ("loss_convergence", "paper Fig.8: loss congruence"),
     ("packing", "LM-side dual-constraint packing"),
@@ -45,6 +46,8 @@ def main() -> None:
                 from . import bench_dispatch as m
             elif name == "adaln_kernel":
                 from . import bench_adaln_kernel as m
+            elif name == "attention":
+                from . import bench_attention as m
             elif name == "fusion_system":
                 from . import bench_fusion_system as m
             elif name == "loss_convergence":

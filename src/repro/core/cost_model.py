@@ -50,6 +50,17 @@ class CostModel:
     def predict(self, batch_size: float, seq_len: float) -> float:
         return self.a + self.b * batch_size * float(seq_len) ** self.p
 
+    def predict_packed(self, batch_size: float, seg_lengths: Sequence[int]) -> float:
+        """Step time for a packed variable-length window.
+
+        With a segment-aware attention kernel the quadratic term follows the
+        per-segment load Σ len_i^p, not the window total (Σ len_i)^p — the
+        naive ``predict(B, sum(lengths))`` over-charges packed windows by up
+        to the packing factor, which would make the StepPlanner's B·S^p
+        dispatch systematically misweight them.
+        """
+        return self.a + self.b * batch_size * packed_load(seg_lengths, self.p)
+
     def m_comp_for_target(self, target_sync: float) -> float:
         """Back-derive the compute budget M_comp = (target - a) / b."""
         if target_sync <= self.a:
@@ -66,6 +77,17 @@ class CostModel:
     @staticmethod
     def from_json(s: str) -> "CostModel":
         return CostModel(**json.loads(s))
+
+
+def packed_load(seg_lengths: Sequence[int], p: float) -> float:
+    """Per-segment load Σ len_i^p of a packed window.
+
+    The single source of truth for scoring packed variable-length windows:
+    ``data/packing.py`` stamps it on every ``PackedWindow`` and the
+    segment-aware attention kernel's executed tiles scale with it (p = 2 is
+    exact attention FLOPs; the fitted p folds in the linear terms).
+    """
+    return float(sum(float(n) ** p for n in seg_lengths))
 
 
 def _ols_r2(x: np.ndarray, y: np.ndarray) -> tuple[float, float, float]:

@@ -4,6 +4,13 @@ For LM training the bucket unit is a *document*; the equal-token baseline
 packs documents into fixed windows by token count alone, while the
 AdaptiveLoad policy packs to a fitted ``sum(len^p)`` budget, which is the
 exact analogue of Eq. 2 at document granularity.
+
+Every window records its per-document lengths, and ``window_segment_ids`` /
+``segment_id_batch`` materialize the int32 segment-id arrays the
+segment-aware attention kernel consumes (``-1`` marks window padding) — so
+a packed window trains without cross-document contamination and its
+attention cost follows the per-segment load Σ len_i^p that
+``core.cost_model.packed_load`` scores.
 """
 
 from __future__ import annotations
@@ -13,12 +20,17 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core.cost_model import packed_load
+
+PAD_SEGMENT_ID = -1
+
 
 @dataclasses.dataclass(frozen=True)
 class PackedWindow:
     doc_ids: tuple[int, ...]
     tokens: int
     load: float  # sum(len^p)
+    lengths: tuple[int, ...] = ()  # per-document token counts, doc_ids order
 
 
 def pack_documents(
@@ -38,7 +50,13 @@ def pack_documents(
     windows: list[dict] = []
     for i in order:
         n = int(lengths[i])
-        ld = float(n) ** p if p is not None else 0.0
+        if n > window:
+            raise ValueError(
+                f"document {i} has {n} tokens > window {window}; chunk or "
+                f"drop oversize documents upstream (packing would silently "
+                f"truncate its segment-id row while load scored {n}^p)"
+            )
+        ld = packed_load((n,), p) if p is not None else 0.0
         placed = False
         for w in windows:
             if w["tokens"] + n > window:
@@ -46,15 +64,37 @@ def pack_documents(
             if load_budget is not None and w["load"] + ld > load_budget:
                 continue
             w["ids"].append(int(i))
+            w["lens"].append(n)
             w["tokens"] += n
             w["load"] += ld
             placed = True
             break
         if not placed:
-            windows.append({"ids": [int(i)], "tokens": n, "load": ld})
+            windows.append({"ids": [int(i)], "lens": [n], "tokens": n, "load": ld})
     return [
-        PackedWindow(tuple(w["ids"]), w["tokens"], w["load"]) for w in windows
+        PackedWindow(tuple(w["ids"]), w["tokens"], w["load"], tuple(w["lens"]))
+        for w in windows
     ]
+
+
+def window_segment_ids(w: PackedWindow, window: int) -> np.ndarray:
+    """``[window]`` int32 segment ids for one packed window.
+
+    Document j (in ``doc_ids`` order) occupies the next ``lengths[j]`` slots
+    with id j; trailing padding gets ``PAD_SEGMENT_ID`` so the kernel masks
+    it (padding attends only padding).
+    """
+    ids = np.full((window,), PAD_SEGMENT_ID, np.int32)
+    off = 0
+    for j, n in enumerate(w.lengths):
+        ids[off : off + n] = j
+        off += n
+    return ids
+
+
+def segment_id_batch(windows: Sequence[PackedWindow], window: int) -> np.ndarray:
+    """``[n_windows, window]`` int32 segment ids, one row per window."""
+    return np.stack([window_segment_ids(w, window) for w in windows])
 
 
 def packing_efficiency(windows: Sequence[PackedWindow], window: int) -> float:

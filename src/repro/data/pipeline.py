@@ -29,7 +29,9 @@ from typing import Callable, Deque, Iterator, Sequence
 import numpy as np
 
 from repro.core.bucketing import Bucket
+from repro.core.cost_model import CostModel
 from repro.core.dispatch import StepPlan, StepPlanner, normalized_weights
+from repro.data.packing import PackedWindow, pack_documents, segment_id_batch
 
 
 class BucketedLoader:
@@ -121,6 +123,68 @@ class BucketedLoader:
         except queue.Empty:
             pass
         self._thread.join(timeout=2.0)
+
+
+def materialize_packed_windows(
+    lengths: Sequence[int],
+    *,
+    window: int,
+    p: float | None = None,
+    load_budget: float | None = None,
+    vocab: int = 32_000,
+    batch_windows: int = 1,
+    seed: int = 0,
+    cost_model: CostModel | None = None,
+) -> list[dict]:
+    """Pack documents and materialize model-ready packed microbatches.
+
+    Each microbatch dict carries ``batch_windows`` windows:
+
+    * ``tokens`` / ``labels`` — ``[Bw, window]`` int32 synthetic streams
+      (padding slots and document-final positions carry label 0: the loss
+      has no ignore-index, so boundary/padding targets are neutralized to a
+      constant class rather than predicting across documents),
+    * ``segment_ids`` — ``[Bw, window]`` int32 per-window segment-id rows
+      (document j -> id j, padding -> -1), exactly what
+      ``models.transformer.lm_loss(..., segment_ids=...)`` and the
+      segment-aware flash kernel consume,
+    * ``windows`` — the ``PackedWindow`` records, and
+    * ``load`` — the microbatch's per-segment load Σ len_i^p (via
+      ``cost_model.predict_packed`` when a fitted model is passed, else the
+      raw window loads), the ``load_of`` the StepPlanner should dispatch on.
+    """
+    windows = pack_documents(lengths, window=window, p=p, load_budget=load_budget)
+    rng = np.random.default_rng(seed)
+    out: list[dict] = []
+    for i in range(0, len(windows), batch_windows):
+        group: list[PackedWindow] = windows[i : i + batch_windows]
+        seg = segment_id_batch(group, window)
+        tokens = rng.integers(1, vocab, size=seg.shape, dtype=np.int64)
+        tokens[seg < 0] = 0
+        labels = np.roll(tokens, -1, axis=1)
+        labels[seg < 0] = 0
+        labels[:, -1] = 0
+        # a document's last token must not predict the next document's first
+        labels[:, :-1][seg[:, :-1] != seg[:, 1:]] = 0
+        if cost_model is not None:
+            # one fitted intercept per microbatch (matching predict(B, S) for
+            # ordinary buckets), not one per window
+            all_lengths = [n for w in group for n in w.lengths]
+            load = cost_model.predict_packed(1, all_lengths)
+        else:
+            load = sum(w.load for w in group)
+            if load == 0.0:  # p=None packing records no loads; token count
+                load = float(sum(w.tokens for w in group))  # keeps LPT usable
+        out.append(
+            {
+                "tokens": tokens.astype(np.int32),
+                "labels": labels.astype(np.int32),
+                "segment_ids": seg,
+                "windows": group,
+                "load": float(load),
+            }
+        )
+    return out
 
 
 WorkerStep = list[tuple[Bucket, dict]]  # one rank's microbatches for one step

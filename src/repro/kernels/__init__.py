@@ -63,6 +63,69 @@ def adaln_modulate(x, scale, shift, eps: float = 1e-6):
     return adaln_fused_ref(x, scale, shift, eps)
 
 
+_flash_fallback_warned: set = set()
+
+
+def _warn_flash_fallback(dh: int) -> None:
+    """Pallas backend requested but the flash kernel can't tile this head
+    dim; say so once per shape instead of silently using the jnp path."""
+    if dh not in _flash_fallback_warned:
+        _flash_fallback_warned.add(dh)
+        import warnings
+
+        warnings.warn(
+            f"pallas backend: flash attention needs head_dim % 128 == 0 "
+            f"(got dh={dh}); using the jnp blocked_attention path for this "
+            f"shape",
+            stacklevel=3,
+        )
+
+
+def attention(
+    q,  # [B, Sq, Hq, dh]
+    k,  # [B, Skv, Hkv, dh]  (GQA: Hq % Hkv == 0)
+    v,
+    *,
+    causal: bool,
+    q_segment_ids=None,  # [B, Sq] int32, non-negative; None = one segment
+    kv_segment_ids=None,  # [B, Skv]
+    scale: float | None = None,
+):
+    """Segment-aware self/cross attention (model [B, S, H, dh] layout).
+
+    On the pallas backends this routes through the flash-attention kernel
+    (Pallas forward AND backward, (q_tile, kv_tile) pairs with disjoint
+    segment ranges skipped); otherwise through ``blocked_attention``, the
+    jnp oracle and SPMD-friendly CPU/dry-run path.  Both mask by segment-id
+    equality, so packed variable-length windows never attend across
+    document boundaries.
+    """
+    # models are layered above kernels; import lazily to avoid the cycle
+    from repro.models.attention import blocked_attention, repeat_kv
+
+    hq, dh = q.shape[2], q.shape[3]
+    hkv = k.shape[2]
+    if hq % hkv != 0:  # no backend can group these heads
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got Hq={hq}, Hkv={hkv}")
+    if _BACKEND.startswith("pallas"):
+        if dh % 128 == 0:
+            from .flash_attention.ops import flash_attention
+
+            out = flash_attention(
+                q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                q_segment_ids, kv_segment_ids,
+                causal=causal, scale=scale, interpret=_interpret(),
+            )
+            return out.swapaxes(1, 2)
+        _warn_flash_fallback(dh)
+    g = hq // hkv
+    return blocked_attention(
+        q, repeat_kv(k, g), repeat_kv(v, g),
+        causal=causal, scale=scale,
+        q_segment_ids=q_segment_ids, kv_segment_ids=kv_segment_ids,
+    )
+
+
 def rms_norm(x, w, eps: float = 1e-6):
     if _BACKEND.startswith("pallas"):
         from .fused_rmsnorm.ops import rms_norm as op
@@ -101,6 +164,7 @@ def qk_norm(q, k, wq, wk, eps: float = 1e-6):
 __all__ = [
     "set_backend",
     "get_backend",
+    "attention",
     "adaln_modulate",
     "rms_norm",
     "gated_rms_norm",

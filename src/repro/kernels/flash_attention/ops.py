@@ -1,9 +1,23 @@
-"""jit'd wrapper: Pallas flash forward + reference VJP backward.
+"""jit'd wrapper: Pallas flash attention, forward AND backward.
 
-Forward runs the Pallas kernel (causal tile skipping, VMEM-resident softmax
-state).  Backward recomputes attention through the jnp oracle's VJP — the
-standard recompute-in-backward pattern; a dedicated Pallas backward kernel is
-an optimization left on the table (documented in EXPERIMENTS.md §Perf).
+Both passes run Pallas kernels (``flash.py``): the forward keeps its softmax
+state in VMEM and emits LSE rows; the backward recomputes score tiles from
+the (q, k, v, out, lse) residuals — dq via a kv-sweep, dk/dv via a q-sweep
+with VMEM-resident fp32 accumulators — instead of re-materializing fp32
+score residuals through the jnp oracle's VJP (the old reference-VJP
+recompute path this replaced).
+
+Segment-id masking makes packed variable-length windows first-class: pass
+``q_segment_ids``/``kv_segment_ids`` (int32 ``[B, S]``, non-negative ids;
+``-1`` = padding) and (q_tile, kv_tile) pairs whose segment ranges don't
+overlap are skipped entirely, so compiled attention work follows the
+per-segment quadratic load Σ len_i² rather than S².  ``causal=False`` is a
+first-class mode for bidirectional DiT blocks.
+
+Ragged sequence lengths are handled here: inputs are padded up to the tile
+grid with padding marked as segment ``-1`` (padding attends only padding,
+keeping every real row exact and every padded row finite), and outputs are
+sliced back.
 """
 
 from __future__ import annotations
@@ -11,25 +25,120 @@ from __future__ import annotations
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from .flash import flash_attention_fwd_pallas
-from .ref import attention_reference
+from .flash import (
+    DEFAULT_KV_BLOCK,
+    DEFAULT_Q_BLOCK,
+    flash_attention_bwd_dkv_pallas,
+    flash_attention_bwd_dq_pallas,
+    flash_attention_fwd_pallas,
+)
 
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def flash_attention(q, k, v, causal: bool = True, interpret: bool = False):
-    return flash_attention_fwd_pallas(q, k, v, causal=causal, interpret=interpret)
-
-
-def _fwd(q, k, v, causal, interpret):
-    out = flash_attention_fwd_pallas(q, k, v, causal=causal, interpret=interpret)
-    return out, (q, k, v)
-
-
-def _bwd(causal, interpret, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(lambda q, k, v: attention_reference(q, k, v, causal=causal), q, k, v)
-    return vjp(g)
+PAD_SEGMENT_ID = -1
+_MIN_BLOCK = 128  # lane width: LSE/segment blocks keep full lanes
 
 
-flash_attention.defvjp(_fwd, _bwd)
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash(q, k, v, q_seg, kv_seg, causal, q_block, kv_block, scale, interpret):
+    out, _ = flash_attention_fwd_pallas(
+        q, k, v, q_seg, kv_seg,
+        causal=causal, q_block=q_block, kv_block=kv_block,
+        scale=scale, interpret=interpret,
+    )
+    return out
+
+
+def _fwd(q, k, v, q_seg, kv_seg, causal, q_block, kv_block, scale, interpret):
+    # fp32 residual output: delta rows in the backward see the unrounded
+    # accumulator, not the bf16 cast handed to the caller
+    out32, lse = flash_attention_fwd_pallas(
+        q, k, v, q_seg, kv_seg,
+        causal=causal, q_block=q_block, kv_block=kv_block,
+        scale=scale, interpret=interpret, out_dtype=jnp.float32,
+    )
+    return out32.astype(q.dtype), (q, k, v, q_seg, kv_seg, out32, lse)
+
+
+def _bwd(causal, q_block, kv_block, scale, interpret, res, g):
+    q, k, v, q_seg, kv_seg, out, lse = res
+    delta = jnp.sum(
+        g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1
+    )  # [B, Hq, Sq]
+    kw = dict(
+        causal=causal, q_block=q_block, kv_block=kv_block,
+        scale=scale, interpret=interpret,
+    )
+    dq = flash_attention_bwd_dq_pallas(q, k, v, g, lse, delta, q_seg, kv_seg, **kw)
+    dk, dv = flash_attention_bwd_dkv_pallas(q, k, v, g, lse, delta, q_seg, kv_seg, **kw)
+    return dq, dk, dv, None, None
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(
+    q,  # [B, Hq, Sq, dh]
+    k,  # [B, Hkv, Skv, dh]
+    v,
+    q_segment_ids=None,  # [B, Sq] int32, non-negative; None = one segment
+    kv_segment_ids=None,  # [B, Skv]
+    *,
+    causal: bool = True,
+    q_block: int = DEFAULT_Q_BLOCK,
+    kv_block: int = DEFAULT_KV_BLOCK,
+    scale: float | None = None,
+    interpret: bool = False,
+):
+    """Segment-aware flash attention with a Pallas forward and backward.
+
+    GQA is native (Hq a multiple of Hkv); dh must be a multiple of 128.
+    Ragged Sq/Skv are padded to the tile grid and sliced back here.
+    """
+    b, hq, sq, dh = q.shape
+    skv = k.shape[2]
+    if dh % 128 != 0:
+        raise ValueError(f"head_dim must be a multiple of 128, got {dh}")
+    scale = float(scale) if scale is not None else dh**-0.5
+    if (q_segment_ids is None) != (kv_segment_ids is None):
+        raise ValueError("pass both q_segment_ids and kv_segment_ids, or neither")
+
+    def _pick_block(s: int, block: int) -> tuple[int, int]:
+        # pad ragged lengths only to the lane granule, not a whole block:
+        # sq=300 pads to 384 with 128-tiles, not to 512 with a 256-tile of
+        # mostly padding
+        if s % block == 0:
+            return min(block, s), s
+        gran = min(block, _MIN_BLOCK)
+        s_p = _round_up(s, gran)
+        blk = block if s_p % block == 0 else gran
+        return min(blk, s_p), s_p
+
+    qb, sq_p = _pick_block(sq, q_block)
+    kb, skv_p = _pick_block(skv, kv_block)
+    pq, pk = sq_p - sq, skv_p - skv
+
+    if (pq or pk) and q_segment_ids is None:
+        q_segment_ids = jnp.zeros((b, sq), jnp.int32)
+        kv_segment_ids = jnp.zeros((b, skv), jnp.int32)
+    if pq or pk:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        q_segment_ids = jnp.pad(
+            q_segment_ids, ((0, 0), (0, pq)), constant_values=PAD_SEGMENT_ID
+        )
+        kv_segment_ids = jnp.pad(
+            kv_segment_ids, ((0, 0), (0, pk)), constant_values=PAD_SEGMENT_ID
+        )
+    if q_segment_ids is not None:
+        q_segment_ids = q_segment_ids.astype(jnp.int32)
+        kv_segment_ids = kv_segment_ids.astype(jnp.int32)
+
+    out = _flash(q, k, v, q_segment_ids, kv_segment_ids,
+                 causal, qb, kb, scale, interpret)
+    return out[:, :, :sq] if pq else out

@@ -18,12 +18,26 @@ from .adaln import (
 from .ref import adaln_fused_ref
 
 
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target``.
+
+    Never exceeds the VMEM-safe ``target``; for awkward ``n`` (e.g. prime)
+    this bottoms out at 1 and ``_pallas_supported`` routes to the jnp ref
+    instead of letting a huge degenerate block blow up VMEM.
+    """
+    blk = min(target, n)
+    while blk > 1 and n % blk != 0:
+        blk -= 1
+    return blk
+
+
 def _pallas_supported(x, scale, shift) -> bool:
     return (
         x.ndim == 3
         and scale.ndim == 2
         and x.shape[-1] % 128 == 0
         and x.shape[0] == scale.shape[0]
+        and _seq_block(x.shape[1]) >= 8
     )
 
 
@@ -36,12 +50,7 @@ def _adaln_pallas(x, scale, shift, eps, interpret):
 
 
 def _seq_block(s: int) -> int:
-    sb = DEFAULT_SEQ_BLOCK
-    while s % sb != 0:
-        sb //= 2
-        if sb < 8:
-            return s
-    return sb
+    return _divisor_block(s, DEFAULT_SEQ_BLOCK)
 
 
 def _fwd(x, scale, shift, eps, interpret):
@@ -52,10 +61,7 @@ def _fwd(x, scale, shift, eps, interpret):
 
 
 def _block_of(n: int, target: int) -> int:
-    blk = target
-    while n % blk != 0 and blk > 8:
-        blk //= 2
-    return blk if n % blk == 0 else n
+    return _divisor_block(n, target)
 
 
 def _bwd(eps, interpret, res, dy):

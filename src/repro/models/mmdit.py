@@ -27,7 +27,6 @@ import jax.numpy as jnp
 
 from repro import kernels as K
 
-from .attention import blocked_attention
 from .config import ModelConfig
 from .layers import dense_init, mlp_params, apply_mlp, norm_params, apply_norm
 
@@ -80,8 +79,13 @@ def init_params(key, cfg: ModelConfig) -> Params:
     return params
 
 
-def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None):
-    """mod: [B, 6, d] modulation signals (shared t-emb + per-block bias)."""
+def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None, segment_ids=None):
+    """mod: [B, 6, d] modulation signals (shared t-emb + per-block bias).
+
+    ``segment_ids`` ([B, S] int32, -1 = padding) scope self-attention to
+    packed-window segments; cross-attention to the shared text stream stays
+    unsegmented.
+    """
     b, s, d = x.shape
     h, dh = cfg.n_heads, cfg.head_dim
     if policy is not None:
@@ -104,7 +108,10 @@ def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None):
         q = policy.constrain(q, "attn_q")
         k = policy.constrain(k, "attn_kv")
         v = policy.constrain(v, "attn_kv")
-    ctx = blocked_attention(q, k, v, causal=False)  # full bidirectional
+    ctx = K.attention(  # full bidirectional; flash kernel on TPU backends
+        q, k, v, causal=False,
+        q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+    )
     x = x + gate1[:, None, :].astype(x.dtype) * (ctx.reshape(b, s, h * dh) @ bp["wo"])
 
     # --- cross attention to text
@@ -114,7 +121,7 @@ def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None):
     kvx = txt @ bp["xkv"]
     kx = kvx[..., : h * dh].reshape(b, n, h, dh)
     vx = kvx[..., h * dh :].reshape(b, n, h, dh)
-    ctx2 = blocked_attention(qx, kx, vx, causal=False)
+    ctx2 = K.attention(qx, kx, vx, causal=False)
     x = x + ctx2.reshape(b, s, h * dh) @ bp["xo"]
 
     # --- MLP with fused AdaLN-modulate
@@ -133,6 +140,7 @@ def forward(
     policy=None,
     remat: bool = True,
     unroll: bool = False,
+    segment_ids=None,  # [B, S_vis] int32: packed-window doc ids (-1 = pad)
 ):
     x = latents @ params["x_in"]
     txt = text.astype(x.dtype) @ params["txt_in"]
@@ -141,7 +149,9 @@ def forward(
     mod = (temb @ params["t_mlp2"]).reshape(-1, 6, cfg.d_model).astype(jnp.float32)
 
     def superblock(x, bp):
-        return _block(bp, x, txt, mod, cfg, policy=policy), None
+        return _block(
+            bp, x, txt, mod, cfg, policy=policy, segment_ids=segment_ids
+        ), None
 
     body = jax.checkpoint(superblock) if remat else superblock
     x, _ = jax.lax.scan(body, x, params["blocks"], unroll=unroll)
@@ -160,6 +170,7 @@ def rectified_flow_loss(
     *,
     policy=None,
     unroll: bool = False,
+    segment_ids=None,
 ):
     b = x0.shape[0]
     k1, k2 = jax.random.split(rng)
@@ -167,5 +178,8 @@ def rectified_flow_loss(
     eps = jax.random.normal(k2, x0.shape, jnp.float32).astype(x0.dtype)
     xt = ((1.0 - t)[:, None, None] * x0 + t[:, None, None] * eps).astype(x0.dtype)
     v_target = (eps.astype(jnp.float32) - x0.astype(jnp.float32))
-    v_pred = forward(params, cfg, xt, text, t, policy=policy, unroll=unroll)
+    v_pred = forward(
+        params, cfg, xt, text, t,
+        policy=policy, unroll=unroll, segment_ids=segment_ids,
+    )
     return jnp.mean((v_pred.astype(jnp.float32) - v_target) ** 2)

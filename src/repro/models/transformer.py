@@ -23,10 +23,10 @@ import jax
 import jax.numpy as jnp
 
 from .attention import (
-    blocked_attention,
     decode_attention,
     local_attention,
     repeat_kv,
+    segment_relative_positions,
 )
 from .config import ModelConfig
 from .layers import (
@@ -208,7 +208,9 @@ def _project_qkv(bp: Params, x, cfg: ModelConfig):
     return q, k, v
 
 
-def _self_attn_full(bp, x, cfg: ModelConfig, positions, policy, *, local: bool):
+def _self_attn_full(
+    bp, x, cfg: ModelConfig, positions, policy, *, local: bool, segment_ids=None
+):
     q, k, v = _project_qkv(bp, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -218,9 +220,15 @@ def _self_attn_full(bp, x, cfg: ModelConfig, positions, policy, *, local: bool):
         k = policy.constrain(k, "attn_kv")
         v = policy.constrain(v, "attn_kv")
     if local:
-        ctx = local_attention(q, repeat_kv(k, g), repeat_kv(v, g), window=cfg.local_window)
+        ctx = local_attention(
+            q, repeat_kv(k, g), repeat_kv(v, g),
+            window=cfg.local_window, segment_ids=segment_ids,
+        )
     else:
-        ctx = blocked_attention(q, repeat_kv(k, g), repeat_kv(v, g), causal=True)
+        ctx = K.attention(  # GQA-native; flash kernel on TPU backends
+            q, k, v, causal=True,
+            q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+        )
     b, s = x.shape[:2]
     out = ctx.reshape(b, s, cfg.n_heads * cfg.head_dim) @ bp["wo"]
     return out, (k, v)
@@ -234,8 +242,7 @@ def _cross_attn_full(bp, x, memory, cfg: ModelConfig, policy):
     kv = memory @ bp["wkv"]
     k = kv[..., : hkv * dh].reshape(b, n, hkv, dh)
     v = kv[..., hkv * dh :].reshape(b, n, hkv, dh)
-    g = h // hkv
-    ctx = blocked_attention(q, repeat_kv(k, g), repeat_kv(v, g), causal=False)
+    ctx = K.attention(q, k, v, causal=False)
     out = ctx.reshape(b, s, h * dh) @ bp["wo"]
     return jnp.tanh(bp["gate"]).astype(out.dtype) * out, (k, v)
 
@@ -251,6 +258,7 @@ def apply_block(
     policy=None,
     n_groups: int = 1,
     collect_cache: bool = False,
+    segment_ids=None,
 ):
     """One transformer block in train/prefill mode.
 
@@ -263,7 +271,8 @@ def apply_block(
         h = policy.constrain(h, "resid")
     if kind in ("attn", "moe", "local"):
         out, (k, v) = _self_attn_full(
-            bp["attn"], h, cfg, positions, policy, local=(kind == "local")
+            bp["attn"], h, cfg, positions, policy,
+            local=(kind == "local"), segment_ids=segment_ids,
         )
         x = x + out
         if collect_cache:
@@ -425,13 +434,21 @@ def forward(
     remat: bool = True,
     collect_cache: bool = False,
     unroll: bool = False,
+    segment_ids=None,  # [B, S] int32: packed-window doc ids (-1 = padding)
 ):
-    """Token ids [B, S] -> (hidden [B, S, d], aux_loss, caches|None)."""
+    """Token ids [B, S] -> (hidden [B, S, d], aux_loss, caches|None).
+
+    With ``segment_ids`` set (packed windows), self-attention is scoped to
+    each document and RoPE positions restart at every document boundary.
+    """
     lead, pat, n_rep, tail = cfg.superblocks()
     x = params["embed"][tokens]
     if policy is not None:
         x = policy.constrain(x, "resid")
-    positions = jnp.arange(tokens.shape[1])
+    if segment_ids is not None:
+        positions = segment_relative_positions(segment_ids)
+    else:
+        positions = jnp.arange(tokens.shape[1])
     aux = jnp.zeros((), jnp.float32)
     caches: Params = {"lead": [], "tail": [], "blocks": {}}
 
@@ -439,7 +456,7 @@ def forward(
         return apply_block(
             bp, x, kind, cfg, positions,
             memory=memory, policy=policy, n_groups=n_groups,
-            collect_cache=collect_cache,
+            collect_cache=collect_cache, segment_ids=segment_ids,
         )
 
     for bp, kind in zip(params["lead"], lead):
@@ -492,10 +509,11 @@ def lm_loss(
     n_groups: int = 1,
     loss_chunk: int = 512,
     unroll: bool = False,
+    segment_ids=None,
 ):
     h, aux, _ = forward(
         params, cfg, tokens, memory=memory, policy=policy, n_groups=n_groups,
-        unroll=unroll,
+        unroll=unroll, segment_ids=segment_ids,
     )
     ce = chunked_softmax_xent(h, params["embed"], labels, chunk=min(loss_chunk, tokens.shape[1]))
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0

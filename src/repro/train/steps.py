@@ -50,10 +50,13 @@ def make_loss_fn(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callabl
     n_groups = policy.n_dispatch_groups if policy is not None else 1
 
     def loss_fn(params, batch, rng):
+        # packed variable-length microbatches carry segment ids (-1 = pad);
+        # attention is then scoped per document and RoPE restarts per doc
+        seg = batch.get("segment_ids") if isinstance(batch, dict) else None
         if cfg.family == "mmdit":
             return M.rectified_flow_loss(
                 params, cfg, batch["latents"], batch["text"], rng, policy=policy,
-                unroll=unroll,
+                unroll=unroll, segment_ids=seg,
             )
         memory = batch.get("memory") if isinstance(batch, dict) else None
         return T.lm_loss(
@@ -65,6 +68,7 @@ def make_loss_fn(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callabl
             policy=policy,
             n_groups=n_groups,
             unroll=unroll,
+            segment_ids=seg,
         )
 
     return loss_fn
