@@ -2,16 +2,30 @@
 
 PYTHONPATH := src
 
-.PHONY: test bench bench-dispatch bench-attn example
+.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-attn example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+lint:
+	python -m ruff check src tests benchmarks examples
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
 bench-dispatch:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only dispatch
+
+# the CI perf gate: tiny corpus, JSON artifact, thresholds.json enforced
+bench-smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --json bench_smoke.json
+
+# real SPMD dispatch on 4 virtual host devices (measured per-rank CV)
+bench-mesh:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --mesh
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention

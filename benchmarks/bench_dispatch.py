@@ -13,6 +13,12 @@ which microbatch lands on which rank:
 
 Headline claim to verify: planned LPT/knapsack dispatch beats independent
 draws on BOTH mean compute-CV and simulated throughput.
+
+``--mesh`` adds the REAL counterpart: the same regimes executed SPMD on a
+jax data mesh via ``distributed.plan_exec.PlanExecutor`` (on CPU, virtual
+devices from ``--xla_force_host_platform_device_count``), reporting
+measured per-rank step-time CV and the mesh-vs-oracle gradient parity.
+``--smoke`` shrinks the corpus/steps for the CI gate (< 60 s).
 """
 
 from __future__ import annotations
@@ -30,6 +36,7 @@ from repro.core import (
     simulate_planned,
     sweep_grid,
 )
+from repro.core.bucketing import DataShape
 from repro.data.synthetic import wan_mixed_corpus
 
 N_WORKERS = 8
@@ -38,7 +45,16 @@ ACCUMULATION = 3  # microbatches' worth of load per rank per step
 SEED = 7
 
 
-def run(csv: list[str]) -> dict:
+def run(csv: list[str], smoke: bool = False, mesh: bool = False) -> dict:
+    out = _run_sim(csv, n_steps=60 if smoke else N_STEPS, strict=not smoke)
+    if mesh:
+        out["mesh"] = run_mesh(csv, smoke=smoke)
+    return out
+
+
+def _run_sim(
+    csv: list[str], n_steps: int = N_STEPS, strict: bool = True
+) -> dict:
     shapes, weights = wan_mixed_corpus()
     dims = ModelDims(n_layers=30, d_model=1536, d_ff=8960, n_heads=12,
                      head_dim=128)
@@ -61,16 +77,16 @@ def run(csv: list[str]) -> dict:
 
     results = {
         "independent": simulate_packed(
-            sampler, N_WORKERS, N_STEPS, cost_fn, **common
+            sampler, N_WORKERS, n_steps, cost_fn, **common
         )
     }
     for strat in ("random", "lpt", "knapsack"):
         results[f"planned/{strat}"] = simulate_planned(
-            sampler, N_WORKERS, N_STEPS, cost_fn, strategy=strat, **common
+            sampler, N_WORKERS, n_steps, cost_fn, strategy=strat, **common
         )
 
     base = results["independent"].summary()
-    print(f"[dispatch] {N_WORKERS} workers, {N_STEPS} steps, "
+    print(f"[dispatch] {N_WORKERS} workers, {n_steps} steps, "
           f"p={model.p:.2f}, budget={ACCUMULATION}x M_comp")
     out = {}
     for name, r in results.items():
@@ -92,11 +108,15 @@ def run(csv: list[str]) -> dict:
     assert lpt["mean_compute_cv"] < base["mean_compute_cv"], (
         "planned LPT dispatch must beat independent draws on compute-CV"
     )
-    assert lpt["mean_throughput"] > base["mean_throughput"], (
-        "planned LPT dispatch must beat independent draws on throughput"
-    )
-    print("[dispatch] claim verified: planned LPT < independent on compute-CV, "
-          "> on throughput")
+    if strict:
+        # in the load-budget regime both regimes are near-balanced by
+        # construction, so the throughput edge is fractions of a percent —
+        # only meaningful at full step counts, skipped under --smoke
+        assert lpt["mean_throughput"] > base["mean_throughput"], (
+            "planned LPT dispatch must beat independent draws on throughput"
+        )
+    print("[dispatch] claim verified: planned LPT < independent on compute-CV"
+          + (", > on throughput" if strict else " (smoke: tput skipped)"))
 
     # Token-budget regime — the paper's §2.2 failure mode.  Ranks accumulate
     # to an equal TOKEN budget, so independent draws leave the quadratic
@@ -107,10 +127,10 @@ def run(csv: list[str]) -> dict:
         p=model.p, seed=SEED,
     )
     tok_base = simulate_packed(
-        sampler, N_WORKERS, N_STEPS, cost_fn, **tok_common
+        sampler, N_WORKERS, n_steps, cost_fn, **tok_common
     ).summary()
     tok_lpt = simulate_planned(
-        sampler, N_WORKERS, N_STEPS, cost_fn, strategy="lpt",
+        sampler, N_WORKERS, n_steps, cost_fn, strategy="lpt",
         load_of=load_of, **tok_common
     ).summary()
     out["token/independent"], out["token/planned_lpt"] = tok_base, tok_lpt
@@ -127,3 +147,197 @@ def run(csv: list[str]) -> dict:
     assert tok_lpt["mean_compute_cv"] < tok_base["mean_compute_cv"]
     assert tok_lpt["mean_throughput"] > tok_base["mean_throughput"]
     return out
+
+
+# -- mesh mode: the same regimes, executed for real on a jax data mesh --------
+
+MESH_WORKERS = 4
+# CPU-sized mixed image/video corpus: S from ~80 to ~3k logical tokens so
+# the quadratic term dominates and the heavy tail is real.  Long shapes pick
+# text_len so S is a multiple of the LM loss chunk (512).
+MESH_SHAPES = [
+    DataShape(1, 128, 128, 16),    # image, S=80
+    DataShape(1, 256, 256, 16),    # image, S=272
+    DataShape(17, 256, 256, 256),  # 1s video, S=1024
+    DataShape(33, 256, 256, 256),  # 2s video, S=1536
+    DataShape(81, 256, 256, 256),  # 5s video, S=3072
+]
+MESH_WEIGHTS = [0.32, 0.28, 0.18, 0.12, 0.10]
+
+
+def run_mesh(csv: list[str], smoke: bool = False) -> dict:
+    """Execute planned vs independent dispatch SPMD and measure reality.
+
+    Flow: dual-constraint buckets over the mini corpus -> warm the executor
+    (every shape compiles on every device) -> calibrate the cost model from
+    measured per-microbatch telemetry -> run both regimes on identical
+    token budgets -> report measured per-rank step-time CV + the
+    mesh-vs-single-device gradient parity."""
+    import jax
+
+    from repro.core import BenchSample, StepPlanner, fit_cost_model as fit
+    from repro.data.synthetic import make_lm_batch
+    from repro.distributed.plan_exec import (
+        PlanExecutor, oracle_step, rel_l2, worker_steps_digest,
+    )
+    from repro.launch.mesh import make_data_mesh
+    from repro.models.config import ModelConfig
+    from repro.optim.adamw import OptimizerConfig
+    from repro.train.steps import init_state
+
+    if jax.device_count() < MESH_WORKERS:
+        raise RuntimeError(
+            f"--mesh needs {MESH_WORKERS} devices, found {jax.device_count()}; "
+            f"export XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{MESH_WORKERS}"
+        )
+    # thin model so the attention quadratic dominates per-microbatch time
+    # (equal-token buckets make the linear term identical by construction;
+    # all the heavy-tail spread the planner must fix comes from B*S^2)
+    cfg = ModelConfig(
+        name="dispatch-mesh", family="dense", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=32, d_ff=128, vocab=256,
+        dtype="float32",
+    )
+    opt = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+    policy = BucketingPolicy(m_mem=4096, m_comp=2e7, p=2.0)
+    buckets = policy.make_buckets(MESH_SHAPES)
+    n_steps = 4 if smoke else 8
+    rng = np.random.default_rng(SEED)
+
+    def make_batch(b):
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        return jax.device_get(
+            make_lm_batch(key, b.batch_size, b.seq_len, cfg.vocab)
+        )
+
+    mesh = make_data_mesh(MESH_WORKERS)
+    ex = PlanExecutor(mesh, cfg, opt)
+    state0 = init_state(jax.random.PRNGKey(0), cfg, opt)
+    state = ex.place_state(state0)
+    print(f"[dispatch/mesh] warming {len(buckets)} shapes x "
+          f"{MESH_WORKERS} devices ...")
+    ex.warmup(state, [make_batch(b) for b in buckets])
+
+    # -- calibration: fit t = a + b*B*S^p from direct per-shape reps -------
+    sampler = CorpusSampler(buckets, MESH_WEIGHTS)
+    tok_budget = 3.0 * policy.m_mem  # ~3 equal-token microbatches per rank
+    samples = []
+    for b in buckets:
+        for t in ex.time_batch(state, make_batch(b), reps=2 if smoke else 3):
+            samples.append(BenchSample(b.batch_size, b.seq_len, t))
+    model = fit(samples)
+    print(f"[dispatch/mesh] calibrated cost model: p={model.p:.2f} "
+          f"R2={model.r2:.3f} over {len(samples)} reps")
+
+    def run_regime(draw_steps):
+        nonlocal state
+        cvs, times, toks = [], [], 0
+        for i, ws in enumerate(draw_steps):
+            state, out = ex.execute(
+                state, ws, step_key=jax.random.PRNGKey(1000 + i), step=i,
+                digests=[worker_steps_digest(ws)] * MESH_WORKERS,
+                measure=True,
+            )
+            rt = np.asarray(out["rank_times"])
+            cvs.append(float(rt.std() / rt.mean()))
+            times.append(float(rt.max()))
+            toks += sum(b.tokens for share in ws for b, _ in share)
+        return {
+            "mean_step_cv": float(np.mean(cvs)),
+            "mean_step_time": float(np.mean(times)),
+            "throughput": toks / sum(times),
+        }
+
+    # independent: each rank draws to its own token budget (status quo)
+    ind_rng = np.random.default_rng(SEED + 1)
+
+    def independent_steps():
+        for _ in range(n_steps):
+            ws = []
+            for _w in range(MESH_WORKERS):
+                share, acc = [], 0.0
+                while acc < tok_budget:
+                    b = sampler.draw(ind_rng, 1)[0]
+                    share.append((b, make_batch(b)))
+                    acc += b.tokens
+                ws.append(share)
+            yield ws
+
+    # planned LPT: one global pool per step, packed by *measured* cost
+    planner = StepPlanner(
+        buckets, MESH_WEIGHTS, n_workers=MESH_WORKERS, budget=tok_budget,
+        budget_of=lambda b: float(b.tokens),
+        load_of=lambda b: model.load_of(b),
+        strategy="lpt", seed=SEED + 1,
+    )
+
+    def planned_steps():
+        for _ in range(n_steps):
+            plan = planner.plan()
+            yield [
+                [(m, make_batch(m)) for m in plan.worker_microbatches(w)]
+                for w in range(MESH_WORKERS)
+            ]
+
+    ind = run_regime(independent_steps())
+    lpt = run_regime(planned_steps())
+
+    # gradient parity vs the single-device oracle on one planned step,
+    # from a pristine state pair (the training state above was donated)
+    plan = planner.plan()
+    ws = [
+        [(m, make_batch(m)) for m in plan.worker_microbatches(w)]
+        for w in range(MESH_WORKERS)
+    ]
+    key = jax.random.PRNGKey(42)
+    m_state, _ = ex.execute(ex.place_state(state0), ws, step_key=key)
+    o_state, _ = oracle_step(cfg, opt, state0, ws, step_key=key)
+    parity = rel_l2(
+        jax.device_get(m_state["params"]), jax.device_get(o_state["params"])
+    )
+
+    out = {
+        "independent": ind,
+        "planned/lpt": lpt,
+        "grad_rel_l2_vs_oracle": parity,
+        "cost_model": {"p": model.p, "r2": model.r2},
+    }
+    print(f"[dispatch/mesh] {MESH_WORKERS} ranks, {n_steps} steps: "
+          f"per-rank step-time CV {ind['mean_step_cv']:.3f} (independent) -> "
+          f"{lpt['mean_step_cv']:.3f} (planned LPT); throughput "
+          f"{ind['throughput']:,.0f} -> {lpt['throughput']:,.0f} tok/s "
+          f"({(lpt['throughput']/ind['throughput']-1)*100:+.1f}%)")
+    print(f"[dispatch/mesh] grad parity vs single-device oracle: "
+          f"rel-L2 {parity:.2e}")
+    csv.append(
+        f"dispatch.mesh,0.0,cv={ind['mean_step_cv']:.3f}->"
+        f"{lpt['mean_step_cv']:.3f};parity={parity:.2e}"
+    )
+    assert parity <= 1e-5, (
+        f"mesh gradients drifted from the single-device oracle: {parity:.2e}"
+    )
+    assert lpt["mean_step_cv"] < ind["mean_step_cv"], (
+        "planned LPT must beat independent draws on measured per-rank CV"
+    )
+    if not smoke:
+        # the absolute acceptance line needs the full step count to average
+        # out CPU contention between the virtual devices; smoke keeps only
+        # the (robust, ~3-5x margin) relative assertion above
+        assert lpt["mean_step_cv"] <= 0.10, (
+            f"planned-LPT measured per-rank step-time CV "
+            f"{lpt['mean_step_cv']:.3f} above the 0.10 acceptance line"
+        )
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    a = ap.parse_args()
+    rows: list[str] = []
+    run(rows, smoke=a.smoke, mesh=a.mesh)
+    print("\n".join(rows))

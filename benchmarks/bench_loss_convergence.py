@@ -9,7 +9,6 @@ gradients).  Metrics: final-loss gap and curve correlation.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bucketing import BucketingPolicy, DataShape

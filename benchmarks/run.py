@@ -3,11 +3,22 @@
 Emits ``name,us_per_call,derived`` CSV at the end.
 
     PYTHONPATH=src python -m benchmarks.run [--only cost_model,throughput,...]
+        [--smoke] [--mesh] [--json out.json]
+
+``--smoke`` shrinks sections that support it (the CI bench gate runs
+``--only dispatch --smoke``); ``--mesh`` adds real SPMD execution to the
+dispatch section; ``--json`` writes every section's result dict to a file
+(the CI artifact).  After the sections run, ``benchmarks/thresholds.json``
+is enforced: any metric regressing past its checked-in bound fails the
+driver — the perf contract that keeps planned-LPT dispatch honest.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
+import json
+import pathlib
 import sys
 import traceback
 
@@ -24,15 +35,61 @@ SECTIONS = [
     ("roofline", "dry-run roofline terms (deliverable g)"),
 ]
 
+THRESHOLDS_PATH = pathlib.Path(__file__).parent / "thresholds.json"
+
+
+def check_thresholds(results: dict) -> list[str]:
+    """Compare section results against the checked-in bounds.
+
+    ``thresholds.json`` mirrors the result structure; a leaf is
+    ``{"max": x}`` or ``{"min": x}`` applied to the same-keyed metric.
+    Only sections that actually ran are checked (a ``--only`` subset
+    doesn't fail on the others)."""
+    if not THRESHOLDS_PATH.exists():
+        return []
+    bounds = json.loads(THRESHOLDS_PATH.read_text())
+    violations: list[str] = []
+
+    def walk(bound, result, trail: str) -> None:
+        for key, spec in bound.items():
+            here = f"{trail}{key}"
+            if isinstance(spec, dict) and ("max" in spec or "min" in spec):
+                val = result.get(key) if isinstance(result, dict) else None
+                if val is None:
+                    violations.append(f"{here}: metric missing from results")
+                elif "max" in spec and val > spec["max"]:
+                    violations.append(
+                        f"{here}: {val:.4g} exceeds max {spec['max']:.4g}"
+                    )
+                elif "min" in spec and val < spec["min"]:
+                    violations.append(
+                        f"{here}: {val:.4g} below min {spec['min']:.4g}"
+                    )
+            elif isinstance(spec, dict):
+                walk(spec, result.get(key, {}) if isinstance(result, dict) else {},
+                     f"{here}/")
+
+    for section, bound in bounds.items():
+        if section in results:
+            walk(bound, results[section], f"{section}/")
+    return violations
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrunken sections for the CI gate")
+    ap.add_argument("--mesh", action="store_true",
+                    help="add real SPMD execution to the dispatch section")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write section results as JSON (CI artifact)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     csv: list[str] = []
     failures = []
+    results: dict = {}
     for name, desc in SECTIONS:
         if only is not None and name not in only:
             continue
@@ -56,7 +113,13 @@ def main() -> None:
                 from . import bench_packing as m
             elif name == "roofline":
                 from . import roofline as m
-            m.run(csv)
+            kwargs = {}
+            params = inspect.signature(m.run).parameters
+            if "smoke" in params:
+                kwargs["smoke"] = args.smoke
+            if "mesh" in params:
+                kwargs["mesh"] = args.mesh
+            results[name] = m.run(csv, **kwargs)
         except Exception:  # noqa: BLE001
             failures.append(name)
             traceback.print_exc()
@@ -64,9 +127,30 @@ def main() -> None:
     print("\n=== CSV (name,us_per_call,derived) ===")
     for row in csv:
         print(row)
+
+    violations = check_thresholds(results)
+    if violations:
+        print("\nTHRESHOLD violations (benchmarks/thresholds.json):",
+              file=sys.stderr)
+        for v in violations:
+            print(f"  {v}", file=sys.stderr)
+
+    if args.json:
+        payload = {"results": results, "csv": csv,
+                   "threshold_violations": violations}
+        pathlib.Path(args.json).write_text(
+            json.dumps(
+                payload, indent=2,
+                default=lambda o: float(o) if hasattr(o, "__float__") else str(o),
+            )
+        )
+        print(f"\nwrote {args.json}")
+
     if failures:
         print(f"\nFAILED sections: {failures}", file=sys.stderr)
         sys.exit(1)
+    if violations:
+        sys.exit(2)
 
 
 if __name__ == "__main__":

@@ -27,7 +27,7 @@ m_comp = model.m_comp_for_target(model.predict(1, max(s.seq_len for s in shapes)
 
 bb = BucketingPolicy(m_mem=M_MEM, mode="equal_token").make_buckets(shapes)
 ab = BucketingPolicy(m_mem=M_MEM, m_comp=m_comp, p=model.p).make_buckets(shapes)
-cost = lambda b, s: dev.step_time(b, s)
+cost = dev.step_time
 
 print(f"{'workers':>8} {'policy':>12} {'tok/s':>10} {'cv_step':>8} {'compute_cv':>11}")
 for n in (8, 16):

@@ -46,7 +46,9 @@ from .dispatch import (
     StepPlan,
     StepPlanner,
     assign_pool,
+    microbatch_key,
     normalized_weights,
+    plan_digest,
     refine_swaps,
 )
 from .simulator import (
@@ -87,7 +89,9 @@ __all__ = [
     "StepPlan",
     "StepPlanner",
     "assign_pool",
+    "microbatch_key",
     "normalized_weights",
+    "plan_digest",
     "refine_swaps",
     "CorpusSampler",
     "SimulationResult",

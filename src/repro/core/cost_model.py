@@ -61,6 +61,19 @@ class CostModel:
         """
         return self.a + self.b * batch_size * packed_load(seg_lengths, self.p)
 
+    def load_of(self, bucket) -> float:
+        """Predicted step time of one pool microbatch — the ``load_of`` the
+        ``StepPlanner`` should pack on when a pool mixes bucket kinds.
+
+        Rectangular ``Bucket``s are costed ``predict(B, S)``; packed
+        variable-length microbatches (anything exposing per-document
+        ``lengths``, i.e. ``data.packing.PackedBucket``) are costed by the
+        per-segment ``predict_packed`` so packing density is priced in."""
+        lengths = getattr(bucket, "lengths", None)
+        if lengths is not None:
+            return self.predict_packed(1, lengths)
+        return self.predict(bucket.batch_size, bucket.seq_len)
+
     def m_comp_for_target(self, target_sync: float) -> float:
         """Back-derive the compute budget M_comp = (target - a) / b."""
         if target_sync <= self.a:

@@ -28,6 +28,7 @@ are lock-protected.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from typing import Callable, Sequence
 
@@ -37,6 +38,46 @@ from .balancer import assign_lpt, assign_random, makespan
 from .bucketing import Bucket
 
 DISPATCH_STRATEGIES = ("random", "lpt", "knapsack")
+
+
+def microbatch_key(b) -> tuple:
+    """Canonical identity of one pool microbatch, stable across processes.
+
+    ``Bucket`` is keyed by its media shape + batch size; any other bucket
+    kind (e.g. ``data.packing.PackedBucket``) provides ``digest_key()``.
+    Object ids/reprs are deliberately never used — two hosts must derive
+    the same key for logically identical microbatches."""
+    if isinstance(b, Bucket):
+        s = b.shape
+        return ("bucket", s.n_frames, s.height, s.width, s.text_len, b.batch_size)
+    key = getattr(b, "digest_key", None)
+    if key is None:
+        raise TypeError(
+            f"microbatch kind {type(b).__name__} is not digestable: add a "
+            f"digest_key() method so cross-host plan agreement can hash it"
+        )
+    return key()
+
+
+def plan_digest(plan: "StepPlan") -> bytes:
+    """32-byte content hash of a plan — the cross-host agreement token.
+
+    Covers everything that determines execution: the pool's microbatch
+    identities (in order), per-microbatch loads, the per-rank assignment,
+    and the strategy.  Two hosts that derive byte-identical plans from the
+    same seed + telemetry snapshot produce equal digests; any divergence
+    (different RNG state, stale bucket table, version skew) flips the hash
+    and the mesh all-gather check in ``distributed.plan_exec`` trips."""
+    h = hashlib.sha256()
+    h.update(plan.strategy.encode())
+    h.update(np.int64(plan.n_workers).tobytes())
+    for b in plan.microbatches:
+        h.update(repr(microbatch_key(b)).encode())
+    h.update(np.asarray(plan.loads, dtype=np.float64).tobytes())
+    for group in plan.assignments:
+        h.update(np.asarray(group, dtype=np.int64).tobytes())
+        h.update(b"|")
+    return h.digest()
 
 
 def normalized_weights(
@@ -95,6 +136,10 @@ class StepPlan:
         evaluated on the plan itself (before any hardware jitter)."""
         o = np.asarray(self.worker_loads(), dtype=np.float64)
         return float(o.std() / o.mean()) if o.mean() > 0 else 0.0
+
+    def digest(self) -> bytes:
+        """Content hash for cross-host agreement (see :func:`plan_digest`)."""
+        return plan_digest(self)
 
 
 def refine_swaps(
@@ -321,6 +366,8 @@ __all__ = [
     "StepPlanner",
     "assign_pool",
     "makespan",
+    "microbatch_key",
     "normalized_weights",
+    "plan_digest",
     "refine_swaps",
 ]

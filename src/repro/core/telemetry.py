@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Sequence
+from typing import Deque
 
 import numpy as np
 

@@ -77,6 +77,81 @@ def pack_documents(
     ]
 
 
+@dataclasses.dataclass(frozen=True)
+class PackedBucket:
+    """A group of packed windows as a first-class dispatch unit.
+
+    The ``StepPlanner`` pools and packs *microbatches*; for LM training a
+    microbatch is ``batch_windows`` packed windows of one window length.
+    ``PackedBucket`` gives that unit the same duck-typed surface as
+    ``core.bucketing.Bucket`` (``batch_size``/``seq_len``/``tokens``/
+    ``load``), so the planner, loaders, trainer, and mesh executor dispatch
+    packed variable-length work with zero special-casing — while its load
+    follows the *per-segment* Σ len_i^p that the segment-aware attention
+    kernel actually executes (``CostModel.predict_packed``), not the padded
+    (B, S) rectangle.
+    """
+
+    windows: tuple[PackedWindow, ...]
+    window: int  # token slots per window (the padded sequence length)
+
+    def __post_init__(self) -> None:
+        if not self.windows:
+            raise ValueError("PackedBucket needs >= 1 window")
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.windows)
+
+    @property
+    def seq_len(self) -> int:
+        return self.window
+
+    @property
+    def tokens(self) -> int:
+        """Real (non-padding) tokens in the microbatch."""
+        return sum(w.tokens for w in self.windows)
+
+    @property
+    def lengths(self) -> tuple[int, ...]:
+        """Every document length in the microbatch (all windows, in order)."""
+        return tuple(n for w in self.windows for n in w.lengths)
+
+    def load(self, p: float) -> float:
+        """Per-segment load Σ len_i^p — the packed analogue of B*S^p."""
+        return packed_load(self.lengths, p)
+
+    def digest_key(self) -> tuple:
+        """Canonical identity for cross-host plan agreement hashing.
+
+        Per-window length tuples, NOT the flattened concatenation: two
+        packings of the same documents into different window partitions
+        have different batch shapes/segment layouts and must hash
+        differently, or plan agreement would wave through a mismatched
+        collective."""
+        return ("packed", self.window, tuple(w.lengths for w in self.windows))
+
+
+def packed_bucket_pool(
+    lengths: Sequence[int],
+    *,
+    window: int,
+    batch_windows: int = 1,
+    p: float | None = None,
+    load_budget: float | None = None,
+) -> list[PackedBucket]:
+    """Pack a document-length corpus into planner-ready ``PackedBucket``s.
+
+    ``pack_documents`` builds the windows (dual-constraint when ``p``/
+    ``load_budget`` are set); consecutive windows are then grouped
+    ``batch_windows`` at a time into microbatch units."""
+    windows = pack_documents(lengths, window=window, p=p, load_budget=load_budget)
+    return [
+        PackedBucket(tuple(windows[i : i + batch_windows]), window)
+        for i in range(0, len(windows), batch_windows)
+    ]
+
+
 def window_segment_ids(w: PackedWindow, window: int) -> np.ndarray:
     """``[window]`` int32 segment ids for one packed window.
 

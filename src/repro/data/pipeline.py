@@ -30,8 +30,18 @@ import numpy as np
 
 from repro.core.bucketing import Bucket
 from repro.core.cost_model import CostModel
-from repro.core.dispatch import StepPlan, StepPlanner, normalized_weights
-from repro.data.packing import PackedWindow, pack_documents, segment_id_batch
+from repro.core.dispatch import (
+    StepPlan,
+    StepPlanner,
+    assign_pool,
+    normalized_weights,
+)
+from repro.data.packing import (
+    PackedBucket,
+    PackedWindow,
+    pack_documents,
+    segment_id_batch,
+)
 
 
 class BucketedLoader:
@@ -158,14 +168,7 @@ def materialize_packed_windows(
     out: list[dict] = []
     for i in range(0, len(windows), batch_windows):
         group: list[PackedWindow] = windows[i : i + batch_windows]
-        seg = segment_id_batch(group, window)
-        tokens = rng.integers(1, vocab, size=seg.shape, dtype=np.int64)
-        tokens[seg < 0] = 0
-        labels = np.roll(tokens, -1, axis=1)
-        labels[seg < 0] = 0
-        labels[:, -1] = 0
-        # a document's last token must not predict the next document's first
-        labels[:, :-1][seg[:, :-1] != seg[:, 1:]] = 0
+        arrays = _packed_arrays(rng, group, window, vocab)
         if cost_model is not None:
             # one fitted intercept per microbatch (matching predict(B, S) for
             # ordinary buckets), not one per window
@@ -175,16 +178,44 @@ def materialize_packed_windows(
             load = sum(w.load for w in group)
             if load == 0.0:  # p=None packing records no loads; token count
                 load = float(sum(w.tokens for w in group))  # keeps LPT usable
-        out.append(
-            {
-                "tokens": tokens.astype(np.int32),
-                "labels": labels.astype(np.int32),
-                "segment_ids": seg,
-                "windows": group,
-                "load": float(load),
-            }
-        )
+        out.append({**arrays, "windows": group, "load": float(load)})
     return out
+
+
+def _packed_arrays(
+    rng: np.random.Generator,
+    group: Sequence[PackedWindow],
+    window: int,
+    vocab: int,
+) -> dict:
+    """Model-ready arrays for one group of packed windows.
+
+    Padding slots and document-final positions carry label 0 (the loss has
+    no ignore-index, so boundary/padding targets are neutralized to a
+    constant class rather than predicting across documents)."""
+    seg = segment_id_batch(group, window)
+    tokens = rng.integers(1, vocab, size=seg.shape, dtype=np.int64)
+    tokens[seg < 0] = 0
+    labels = np.roll(tokens, -1, axis=1)
+    labels[seg < 0] = 0
+    labels[:, -1] = 0
+    # a document's last token must not predict the next document's first
+    labels[:, :-1][seg[:, :-1] != seg[:, 1:]] = 0
+    return {
+        "tokens": tokens.astype(np.int32),
+        "labels": labels.astype(np.int32),
+        "segment_ids": seg,
+    }
+
+
+def make_packed_batch(
+    rng: np.random.Generator, bucket: PackedBucket, *, vocab: int = 32_000
+) -> dict:
+    """``make_batch`` for planner-dispatched ``PackedBucket`` microbatches.
+
+    Returns arrays only (``tokens``/``labels``/``segment_ids``) so the
+    trainer's shape-signature jit cache keys cleanly on the batch dict."""
+    return _packed_arrays(rng, bucket.windows, bucket.window, vocab)
 
 
 WorkerStep = list[tuple[Bucket, dict]]  # one rank's microbatches for one step
@@ -212,10 +243,16 @@ class ShardedBucketedLoader:
     scheduler can swap bucket tables/budgets mid-training; alternatively,
     pass the scheduler's own planner (``planner=sched.make_planner()``) and
     every scheduler replan reaches dispatch with no manual plumbing.
-    Changing the worker count requires a new loader (queue fan-out is fixed
-    at construction); on elastic resize the launcher rebuilds the loader
-    from the scheduler's re-emitted plan — a resized shared planner makes
-    the producer fail loudly rather than mis-shard.
+
+    **Elastic resize.** ``resize(n)`` rebuilds the queue fan-out in place
+    on rank join/leave: every already-queued microbatch is redistributed
+    across the new rank count exactly once (per original plan boundary, so
+    step alignment survives), and the planner is retargeted so subsequent
+    plans are drawn for ``n`` ranks.  The same rebuild happens automatically
+    when a *shared* planner is resized by the scheduler (the producer adopts
+    the planner's worker count instead of mis-sharding or crashing).
+    ``close()`` and ``resize()`` are mutually exclusive — a close during an
+    in-flight resize can never observe a partially rebuilt fan-out.
     """
 
     def __init__(
@@ -272,9 +309,31 @@ class ShardedBucketedLoader:
             )
         self._make_batch = make_batch
         self._rng = np.random.default_rng(seed + 1)
-        self._queues: list[queue.Queue] = [
-            queue.Queue(maxsize=max(prefetch, 1)) for _ in range(n_workers)
+        # repacking draws (random strategy) use their own stream: _repack
+        # runs under _cv in the *caller's* thread during resize, while the
+        # producer may be mid-_materialize on self._rng (numpy Generators
+        # are not thread-safe)
+        self._repack_rng = np.random.default_rng(seed + 2)
+        # One condition variable guards the per-rank pending deques; plans
+        # are appended atomically (all ranks at once), so rank queues only
+        # ever differ by what consumers have drained.
+        self._cv = threading.Condition()
+        # each entry is (plan_seq, share): the sequence number ties a rank's
+        # share back to the plan that emitted it, so an elastic resize can
+        # regroup by TRUE plan boundary even if per-rank consumers have
+        # drained ranks unevenly
+        self._pending: list[Deque[tuple[int, WorkerStep]]] = [
+            deque() for _ in range(n_workers)
         ]
+        self._seq = 0
+        # microbatches from a resize-orphaned short step, waiting to ride
+        # the producer's next plan (guarded by _cv)
+        self._carry: WorkerStep = []
+        self._prefetch = max(prefetch, 1)
+        # close() vs resize() mutual exclusion: a close landing mid-resize
+        # must see either the old fan-out or the fully rebuilt one, never a
+        # partially redistributed set of queues.
+        self._lifecycle = threading.Lock()
         self._plans: Deque[StepPlan] = deque(maxlen=256)
         self._stop = threading.Event()
         self._error: Exception | None = None
@@ -309,52 +368,171 @@ class ShardedBucketedLoader:
             for w in range(plan.n_workers)
         ]
 
-    def _put(self, q: queue.Queue, item) -> bool:
-        while not self._stop.is_set():
-            try:
-                q.put(item, timeout=0.1)
-                return True
-            except queue.Full:
-                continue
-        return False
+    def _repack(self, items: WorkerStep, n_workers: int) -> list[WorkerStep]:
+        """Re-deal already-materialized microbatches across ``n_workers``
+        using the planner's load function + strategy (exactly-once: items
+        are moved, never duplicated or dropped)."""
+        loads = [float(self._planner.load_of(b)) for b, _ in items]
+        groups = assign_pool(
+            loads, n_workers, self._planner.strategy, self._repack_rng
+        )
+        return [[items[i] for i in g] for g in groups]
+
+    def _emitted_plan(self, per_rank: list[WorkerStep]) -> StepPlan:
+        """The StepPlan a re-packed fan-out actually dispatches — recorded
+        in ``plans`` so telemetry always matches what consumers received
+        (the pre-resize plan's assignments would be a lie)."""
+        mbs: list = []
+        loads: list[float] = []
+        assignments: list[tuple[int, ...]] = []
+        for share in per_rank:
+            idxs = []
+            for b, _ in share:
+                idxs.append(len(mbs))
+                mbs.append(b)
+                loads.append(float(self._planner.load_of(b)))
+            assignments.append(tuple(idxs))
+        return StepPlan(
+            microbatches=tuple(mbs),
+            assignments=tuple(assignments),
+            loads=tuple(loads),
+            strategy=self._planner.strategy,
+        )
+
+    def _adopt_locked(self, n_workers: int) -> None:
+        """Rebuild the queue fan-out in place (``self._cv`` must be held).
+
+        Pending shares are regrouped by the plan-sequence tag each one
+        carries — the TRUE plan boundary, correct even when ``worker_iter``
+        consumers have drained ranks unevenly — and each regrouped pool
+        becomes exactly one step of the new fan-out, so ranks stay in
+        lockstep and every queued microbatch survives exactly once.  A pool
+        too short to give every new rank >= 1 microbatch is not emitted
+        degenerate — its items merge into the following pool, or into
+        ``self._carry`` (prepended to the producer's next plan) if it was
+        the last one, so no consumer ever sees an empty rank share.  Each
+        re-emitted step is recorded in ``plans`` (it is a new dispatch
+        decision; the pre-resize assignments were never fully delivered)."""
+        old = self._pending
+        if n_workers == len(old):
+            return
+        by_seq: dict[int, WorkerStep] = {}
+        for d in old:
+            for seq, share in d:
+                by_seq.setdefault(seq, []).extend(share)
+        new: list[Deque[tuple[int, WorkerStep]]] = [
+            deque() for _ in range(n_workers)
+        ]
+        buf: WorkerStep = list(self._carry)
+        self._carry = []
+        for seq in sorted(by_seq):
+            buf += by_seq[seq]
+            if len(buf) >= n_workers:
+                per_rank = self._repack(buf, n_workers)
+                self._plans.append(self._emitted_plan(per_rank))
+                self._push_locked(new, per_rank)
+                buf = []
+        self._carry = buf
+        self._pending = new
+        self.n_workers = n_workers
+
+    def _push_locked(
+        self,
+        queues: list[Deque[tuple[int, WorkerStep]]],
+        per_rank: list[WorkerStep],
+    ) -> None:
+        """Append one step's shares (tagged with a fresh plan seq)."""
+        seq = self._seq
+        self._seq += 1
+        for w, share in enumerate(per_rank):
+            queues[w].append((seq, share))
 
     def _worker(self) -> None:
         try:
             while not self._stop.is_set():
                 plan = self._planner.plan()
-                if plan.n_workers != len(self._queues):
-                    raise RuntimeError(
-                        f"planner resized to {plan.n_workers} workers but "
-                        f"this loader fans out to {len(self._queues)} "
-                        f"queues; rebuild the ShardedBucketedLoader"
-                    )
                 per_rank = self._materialize(plan)
-                self._plans.append(plan)
-                for w, step in enumerate(per_rank):
-                    if not self._put(self._queues[w], step):
+                with self._cv:
+                    # backpressure on the DEEPEST rank queue: like the old
+                    # per-rank bounded queues, one stalled consumer caps the
+                    # whole pipeline at ``prefetch`` steps of memory instead
+                    # of letting its backlog grow without bound
+                    while not self._stop.is_set() and (
+                        max(len(d) for d in self._pending) >= self._prefetch
+                    ):
+                        self._cv.wait(0.1)
+                    if self._stop.is_set():
                         return
+                    # elastic: the planner may have been resized (shared
+                    # planner, or loader.resize between draw and push) —
+                    # adopt its worker count and re-deal the stale plan
+                    # instead of mis-sharding or dropping materialized work
+                    target = self._planner.n_workers
+                    self._adopt_locked(target)
+                    if plan.n_workers != target or self._carry:
+                        items = self._carry + [
+                            it for share in per_rank for it in share
+                        ]
+                        if len(items) < target:
+                            # a stale small plan can't give every new rank a
+                            # microbatch; hold it for the next (right-sized)
+                            # plan rather than emit empty shares
+                            self._carry = items
+                            continue
+                        per_rank = self._repack(items, target)
+                        self._carry = []
+                        plan = self._emitted_plan(per_rank)
+                    self._plans.append(plan)
+                    self._push_locked(self._pending, per_rank)
+                    self._cv.notify_all()
         except Exception as e:  # noqa: BLE001 — surface to the consumer
             self._error = e
+            with self._cv:
+                self._cv.notify_all()
 
     # -- consumers -------------------------------------------------------------
 
-    def _get(self, q: queue.Queue) -> WorkerStep:
-        while True:
-            if self._error is not None:
-                raise RuntimeError("sharded loader producer failed") from self._error
-            try:
-                return q.get(timeout=0.5)
-            except queue.Empty:
-                if self._stop.is_set():  # closed: end the stream
-                    raise StopIteration
-                continue
+    def _check_error(self) -> None:
+        if self._error is not None:
+            raise RuntimeError(
+                "sharded loader producer failed"
+            ) from self._error
 
     def __iter__(self) -> Iterator[list[WorkerStep]]:
         return self
 
     def __next__(self) -> list[WorkerStep]:
-        """One full step: every rank's microbatches, same plan."""
-        return [self._get(q) for q in self._queues]
+        """One full step: every rank's microbatches, same plan.
+
+        The step is popped atomically under the lock, so an elastic resize
+        can never interleave with a half-consumed step."""
+        with self._cv:
+            while True:
+                self._check_error()
+                n = len(self._pending)
+                if n and all(self._pending):
+                    step = [
+                        self._pending[w].popleft()[1] for w in range(n)
+                    ]
+                    self._cv.notify_all()
+                    return step
+                if self._stop.is_set():  # closed: end the stream
+                    raise StopIteration
+                self._cv.wait(0.1)
+
+    def _get_rank(self, worker: int) -> WorkerStep:
+        with self._cv:
+            while True:
+                self._check_error()
+                if worker >= len(self._pending):
+                    raise StopIteration  # rank left in an elastic shrink
+                if self._pending[worker]:
+                    _seq, item = self._pending[worker].popleft()
+                    self._cv.notify_all()
+                    return item
+                if self._stop.is_set():  # closed: end the stream
+                    raise StopIteration
+                self._cv.wait(0.1)
 
     def worker_iter(self, worker: int) -> Iterator[WorkerStep]:
         """Rank ``worker``'s stream of per-step microbatch lists."""
@@ -362,17 +540,36 @@ class ShardedBucketedLoader:
             raise ValueError(f"worker {worker} out of range [0, {self.n_workers})")
         while True:
             try:
-                step = self._get(self._queues[worker])
+                step = self._get_rank(worker)
             except StopIteration:  # PEP 479: end the generator explicitly
                 return
             yield step
 
+    # -- elasticity -----------------------------------------------------------
+
+    def resize(self, n_workers: int) -> None:
+        """Elastic rank join/leave: rebuild the queue fan-out in place.
+
+        Queued microbatches are redistributed across the new rank count
+        (exactly once, per plan boundary) and the planner is retargeted so
+        subsequent plans are drawn for ``n_workers`` ranks.  Mutually
+        exclusive with ``close()``."""
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        with self._lifecycle:
+            if self._stop.is_set():
+                raise RuntimeError("cannot resize a closed loader")
+            if self._planner.n_workers != n_workers:
+                self._planner.update(n_workers=n_workers)
+            with self._cv:
+                self._adopt_locked(n_workers)
+                self._cv.notify_all()
+
     def close(self) -> None:
-        self._stop.set()
-        for q in self._queues:
-            try:
-                while True:
-                    q.get_nowait()
-            except queue.Empty:
-                pass
+        with self._lifecycle:
+            with self._cv:
+                self._stop.set()
+                for d in self._pending:
+                    d.clear()
+                self._cv.notify_all()
         self._thread.join(timeout=2.0)

@@ -1,0 +1,501 @@
+"""Mesh execution of StepPlans: the SPMD dispatch layer (ROADMAP item).
+
+PR 1's ``StepPlanner`` decides *who runs what* each optimizer step; until
+now one host emulated every DP rank serially, so the plan's 0.37→0.04
+compute-CV win existed only in the simulator.  ``PlanExecutor`` lowers a
+plan onto a real ``jax`` mesh:
+
+* **per-rank streams** — rank ``r``'s microbatches execute on mesh device
+  ``r``.  Each bucket shape gets ONE jitted gradient step (shape-cached, so
+  a shape compiles once no matter which rank runs it); ranks accumulate
+  grads locally while running *different* shape sequences — the KnapFormer
+  production shape of heterogeneous-bucket data parallelism.
+* **one collective per step** — per-rank grad sums meet in a single
+  ``shard_map`` ``psum`` over the ``data`` axis (sums + microbatch counts,
+  so the reduced gradient is the exact mean over the step's global pool),
+  followed by one optimizer update on the replicated state.
+* **plan agreement** — every host derives its plan independently from the
+  shared seed + telemetry snapshot (no central prefetch thread); a
+  32-byte plan digest is all-gathered across the mesh and any divergence
+  raises :class:`PlanAgreementError` *before* a mismatched collective can
+  deadlock or silently skew gradients.
+
+Gradient semantics match the single-device oracle (:func:`oracle_step`):
+each microbatch contributes the gradient of its own mean-token loss, and
+the update consumes the mean over all microbatches in the step's pool —
+regardless of how the plan scattered them across ranks.
+
+CPU note: with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the
+same code runs N virtual devices on one host, which is how the tier-1 mesh
+tests and ``bench_dispatch --mesh`` exercise this path.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import hashlib
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.dispatch import microbatch_key
+from repro.core.telemetry import WorkerStepRecord
+from repro.models.config import ModelConfig
+from repro.optim.adamw import OptimizerConfig, adamw_update
+from repro.train.steps import make_loss_fn
+
+WorkerSteps = Sequence[Sequence[tuple[Any, dict]]]  # [rank][(bucket, batch)]
+
+
+class PlanAgreementError(RuntimeError):
+    """Hosts derived different StepPlans for the same optimizer step."""
+
+
+def data_axis_devices(mesh: Mesh, axis: str = "data") -> list:
+    """Mesh devices ordered along the data axis (other axes must be 1)."""
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+    for name in mesh.axis_names:
+        if name != axis and mesh.shape[name] != 1:
+            raise ValueError(
+                f"plan execution shards microbatches over {axis!r} only; "
+                f"axis {name!r} has size {mesh.shape[name]} (use a pure "
+                f"data-parallel mesh, e.g. launch.mesh.make_data_mesh)"
+            )
+    return list(mesh.devices.reshape(-1))
+
+
+def worker_steps_digest(worker_steps: WorkerSteps) -> bytes:
+    """Content hash of a materialized per-rank fan-out.
+
+    The loader-facing sibling of ``core.dispatch.plan_digest``: when a host
+    only holds its plan's *materialized* form (bucket, batch) — e.g. out of
+    ``ShardedBucketedLoader`` — this hashes the rank-major microbatch
+    identities, which is exactly what execution order depends on."""
+    h = hashlib.sha256()
+    for share in worker_steps:
+        for bucket, _batch in share:
+            h.update(repr(microbatch_key(bucket)).encode())
+        h.update(b"|")
+    return h.digest()
+
+
+def digest_to_row(digest: bytes) -> np.ndarray:
+    """sha256 digest -> [8] uint32 row (the all-gather wire format)."""
+    if len(digest) != 32:
+        raise ValueError(f"expected a 32-byte digest, got {len(digest)}")
+    return np.frombuffer(digest, dtype=np.uint8).view(np.uint32).copy()
+
+
+class PlanExecutor:
+    """Executes one optimizer step's worth of planned microbatches on a mesh.
+
+    Construction compiles nothing; jitted per-shape gradient steps and the
+    psum/update step are built lazily and cached.  ``state`` must be placed
+    on the mesh first via :meth:`place_state` (fully replicated)."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        cfg: ModelConfig,
+        opt: OptimizerConfig,
+        *,
+        policy=None,
+        check_agreement: bool = True,
+        donate: bool = True,
+    ):
+        self.mesh = mesh
+        self.devices = data_axis_devices(mesh)
+        self.n_ranks = len(self.devices)
+        self.cfg = cfg
+        self.opt = opt
+        self.check_agreement = check_agreement
+        self._donate = donate
+        self._replicated = NamedSharding(mesh, P())
+        self._stacked = NamedSharding(mesh, P("data"))
+        loss_fn = make_loss_fn(cfg, policy)
+
+        def grad_step(params, batch, key, idx):
+            rng = jax.random.fold_in(key, idx)
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+            return loss, grads
+
+        # ONE jitted callable; jax retraces per batch-shape signature and
+        # per execution device, so each (shape, rank) pair compiles exactly
+        # once and the steady state pays zero retrace.
+        self._grad_step = jax.jit(grad_step)
+        self._acc_add = jax.jit(
+            lambda a, b: jax.tree.map(jnp.add, a, b), donate_argnums=(0,)
+        )
+        # zero grad tree for mesh devices idled by an elastic shrink; the
+        # committed zero scalar pins execution to the idle device (shard
+        # views alone are uncommitted and would run on the default device)
+        self._zeros = jax.jit(
+            lambda p, z: jax.tree.map(lambda x: jnp.zeros_like(x) + z, p)
+        )
+        # [*] -> [1, *] fp32: the per-rank shard shape the data-axis stack
+        # expects (accumulation happens in the grads' native dtype; the
+        # cross-rank reduction always runs at fp32)
+        self._lift = jax.jit(
+            lambda t: jax.tree.map(lambda g: g[None].astype(jnp.float32), t)
+        )
+        self._gather_digests = jax.jit(
+            shard_map(
+                lambda d: jax.lax.all_gather(d[0], "data", axis=0),
+                mesh=mesh,
+                in_specs=P("data"),
+                out_specs=P(),
+                check_rep=False,  # all_gather output replication isn't inferred
+            )
+        )
+        self._update = None  # built lazily (needs the state tree structure)
+        self._seen_signatures: set = set()
+
+    # -- placement ---------------------------------------------------------
+
+    def place_state(self, state) -> Any:
+        """Replicate a train state across every mesh device.
+
+        Copies before placing: ``device_put`` may alias the source buffer
+        on host platforms, and the update step *donates* its state input —
+        without the copy, stepping would silently delete the caller's
+        original arrays (e.g. the oracle's reference state)."""
+        state = jax.tree.map(lambda x: jnp.array(x, copy=True), state)
+        return jax.device_put(state, self._replicated)
+
+    def is_placed(self, state) -> bool:
+        """True if ``state`` already lives replicated on this mesh."""
+        sh = getattr(state["step"], "sharding", None)
+        return isinstance(sh, NamedSharding) and sh.mesh == self.mesh
+
+    def _rank_view(self, tree, rank: int):
+        """Rank ``rank``'s zero-copy single-device view of a replicated tree."""
+        dev = self.devices[rank]
+
+        def view(x):
+            for s in x.addressable_shards:
+                if s.device == dev:
+                    return s.data
+            raise ValueError(f"state is not addressable on device {dev}")
+
+        return jax.tree.map(view, tree)
+
+    def _rank_views(self, tree) -> list:
+        """Every rank's view of a replicated tree in ONE pass over shards.
+
+        ``_rank_view`` per rank would rescan each leaf's shard list per
+        rank (O(n_ranks² x n_leaves) host work per step); this walks each
+        leaf's shards once and unflattens a per-rank tree list."""
+        dev_index = {d: i for i, d in enumerate(self.devices)}
+        leaves, treedef = jax.tree.flatten(tree)
+        per_rank = [[] for _ in range(self.n_ranks)]
+        for x in leaves:
+            row = [None] * self.n_ranks
+            for s in x.addressable_shards:
+                i = dev_index.get(s.device)
+                if i is not None:
+                    row[i] = s.data
+            if any(r is None for r in row):
+                raise ValueError(
+                    "state is not addressable on every mesh device"
+                )
+            for r in range(self.n_ranks):
+                per_rank[r].append(row[r])
+        return [jax.tree.unflatten(treedef, pl) for pl in per_rank]
+
+    # -- agreement ---------------------------------------------------------
+
+    def verify_agreement(self, digests: Sequence[bytes]) -> None:
+        """All-gather per-host plan digests across the mesh and require
+        unanimity.  ``digests[r]`` is what host ``r`` independently derived;
+        a real deployment passes each host's local digest, the single-host
+        emulation passes ``[plan.digest()] * n_ranks``."""
+        if len(digests) != self.n_ranks:
+            raise ValueError(
+                f"{len(digests)} digests for {self.n_ranks} ranks"
+            )
+        rows = [digest_to_row(d) for d in digests]
+        arr = jax.make_array_from_single_device_arrays(
+            (self.n_ranks, 8),
+            self._stacked,
+            [
+                jax.device_put(r[None], dev)
+                for r, dev in zip(rows, self.devices)
+            ],
+        )
+        gathered = np.asarray(self._gather_digests(arr))
+        ref = gathered[0]
+        bad = [r for r in range(self.n_ranks) if not (gathered[r] == ref).all()]
+        if bad:
+            raise PlanAgreementError(
+                f"plan digests diverge across hosts: ranks {bad} disagree "
+                f"with rank 0 — refusing to step (a mismatched plan means "
+                f"mismatched collectives: deadlock or silent grad skew)"
+            )
+
+    # -- warmup ------------------------------------------------------------
+
+    def warmup(self, state, batches: Sequence[dict]) -> None:
+        """Compile every batch signature on every mesh device.
+
+        Benchmarks and latency-sensitive loops call this once so no
+        measured step ever pays a compile (the executor also tracks
+        freshness itself and drops compile executions from telemetry, but
+        a fully-warm cache keeps wall-clock CV honest too)."""
+        for rank in range(self.n_ranks):
+            dev = self.devices[rank]
+            params_r = self._rank_view(state["params"], rank)
+            key_r = jax.device_put(jax.random.PRNGKey(0), dev)
+            idx_r = jax.device_put(np.int32(0), dev)
+            outs = []
+            for batch in batches:
+                batch_r = jax.device_put(batch, dev)
+                self._seen_signatures.add(self._signature(dev, batch_r))
+                outs.append(self._grad_step(params_r, batch_r, key_r, idx_r)[0])
+            for o in outs:
+                o.block_until_ready()
+
+    def time_batch(
+        self, state, batch: dict, *, rank: int = 0, reps: int = 3
+    ) -> list[float]:
+        """Measure one microbatch's gradient-step wall time on one device.
+
+        Runs an untimed warmup execution first (compile + cache effects),
+        then ``reps`` timed executions — the shape-benchmark primitive the
+        mesh dispatch bench calibrates its cost model with."""
+        dev = self.devices[rank]
+        params_r = self._rank_view(state["params"], rank)
+        key_r = jax.device_put(jax.random.PRNGKey(0), dev)
+        idx_r = jax.device_put(np.int32(0), dev)
+        batch_r = jax.device_put(batch, dev)
+        self._seen_signatures.add(self._signature(dev, batch_r))
+        self._grad_step(params_r, batch_r, key_r, idx_r)[0].block_until_ready()
+        times = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            loss, _ = self._grad_step(params_r, batch_r, key_r, idx_r)
+            loss.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        return times
+
+    @staticmethod
+    def _signature(dev, batch) -> tuple:
+        return (
+            dev.id,
+            tuple(
+                sorted(
+                    (k, tuple(v.shape), str(v.dtype))
+                    for k, v in batch.items()
+                )
+            ),
+        )
+
+    # -- the step ----------------------------------------------------------
+
+    def _build_update(self, state):
+        opt = self.opt
+
+        def reduce_and_update(state, stacked_grads, stacked_stats):
+            def local_sum(tree):
+                return jax.tree.map(
+                    lambda g: jax.lax.psum(jnp.squeeze(g, 0), "data"), tree
+                )
+
+            reduce = shard_map(
+                local_sum,
+                mesh=self.mesh,
+                in_specs=P("data"),
+                out_specs=P(),
+            )
+            grad_sum = reduce(stacked_grads)
+            stat_sum = reduce(stacked_stats)  # [loss_sum, n_micro]
+            n = stat_sum[1]
+            grads = jax.tree.map(lambda g: g / n, grad_sum)
+            new_params, new_opt, stats = adamw_update(
+                state["params"], grads, state["opt"], state["step"], opt
+            )
+            new_state = {
+                "params": new_params,
+                "opt": new_opt,
+                "step": state["step"] + 1,
+            }
+            return new_state, {"loss": stat_sum[0] / n, **stats}
+
+        return jax.jit(
+            reduce_and_update,
+            donate_argnums=(0,) if self._donate else (),
+        )
+
+    def _stack(self, per_rank_trees):
+        """[rank] trees of [1, ...] device-local leaves -> one mesh array
+        tree sharded along the data axis."""
+
+        def stack(*leaves):
+            shape = (self.n_ranks,) + leaves[0].shape[1:]
+            return jax.make_array_from_single_device_arrays(
+                shape, self._stacked, list(leaves)
+            )
+
+        return jax.tree.map(stack, *per_rank_trees)
+
+    def execute(
+        self,
+        state,
+        worker_steps: WorkerSteps,
+        *,
+        step_key,
+        step: int = 0,
+        digests: Sequence[bytes] | None = None,
+        measure: bool = False,
+        time_scale: Callable[[int], float] | None = None,
+    ):
+        """Run one planned optimizer step on the mesh.
+
+        ``worker_steps[r]`` is rank ``r``'s ``(bucket, batch)`` list (one
+        global plan's fan-out).  Microbatch RNGs derive from
+        ``fold_in(step_key, pool_index)`` where ``pool_index`` enumerates
+        the pool rank-major — identical to :func:`oracle_step`, so the
+        reduced gradient is bit-comparable to the single-device oracle.
+
+        ``measure=True`` blocks per microbatch and returns per-rank wall
+        times + per-microbatch ``WorkerStepRecord`` telemetry (compile
+        executions are excluded); the default dispatches every rank
+        asynchronously and blocks once at the update.
+
+        A fan-out SMALLER than the mesh (elastic shrink mid-run) is legal:
+        surplus devices idle for the step, contributing zero grad sums and
+        zero counts so the reduced mean is unchanged.  Growing past the
+        mesh's device count raises — that needs a new mesh/executor.
+        """
+        if len(worker_steps) > self.n_ranks:
+            raise ValueError(
+                f"plan fans out to {len(worker_steps)} ranks but the mesh "
+                f"has only {self.n_ranks} data-axis devices (growing past "
+                f"the mesh requires a new mesh/executor)"
+            )
+        if self.check_agreement and digests is not None:
+            self.verify_agreement(digests)
+
+        pool_index = 0
+        per_rank_grads, per_rank_stats = [], []
+        rank_times: list[float] = []
+        records: list[WorkerStepRecord] = []
+        param_views = self._rank_views(state["params"])
+        for rank in range(self.n_ranks):
+            # elastic shrink: a plan may fan out to fewer ranks than the
+            # mesh has devices — the extra devices idle this step,
+            # contributing zero grad sums and zero counts (the psum mean
+            # over the pool stays exact)
+            share = worker_steps[rank] if rank < len(worker_steps) else []
+            dev = self.devices[rank]
+            params_r = param_views[rank]
+            if not share:
+                if rank < len(worker_steps):
+                    raise ValueError(
+                        f"rank {rank} received an empty microbatch list"
+                    )
+                zero = jax.device_put(np.zeros((), np.float32), dev)
+                per_rank_grads.append(self._lift(self._zeros(params_r, zero)))
+                per_rank_stats.append(
+                    jax.device_put(np.zeros((1, 2), np.float32), dev)
+                )
+                if measure:
+                    rank_times.append(0.0)
+                continue
+            key_r = jax.device_put(step_key, dev)
+            acc = None
+            loss_sum = None
+            t_rank = 0.0
+            for bucket, batch in share:
+                batch_r = jax.device_put(batch, dev)
+                idx_r = jax.device_put(np.int32(pool_index), dev)
+                sig = self._signature(dev, batch_r)
+                fresh = sig not in self._seen_signatures
+                self._seen_signatures.add(sig)
+                t0 = time.perf_counter()
+                loss, grads = self._grad_step(params_r, batch_r, key_r, idx_r)
+                if measure:
+                    loss.block_until_ready()
+                    dt = time.perf_counter() - t0
+                    if not fresh:  # compile executions poison telemetry
+                        scale = time_scale(rank) if time_scale else 1.0
+                        t_rank += dt * scale
+                        records.append(
+                            WorkerStepRecord(
+                                step=step,
+                                worker=rank,
+                                batch_size=bucket.batch_size,
+                                seq_len=bucket.seq_len,
+                                compute_time=dt * scale,
+                            )
+                        )
+                acc = grads if acc is None else self._acc_add(acc, grads)
+                loss_sum = loss if loss_sum is None else loss_sum + loss
+                pool_index += 1
+            per_rank_grads.append(self._lift(acc))
+            stats = jnp.stack(
+                [loss_sum.astype(jnp.float32), jnp.float32(len(share))]
+            )
+            per_rank_stats.append(self._lift(stats))
+            if measure:
+                rank_times.append(t_rank)
+
+        stacked_grads = self._stack(per_rank_grads)
+        stacked_stats = self._stack(per_rank_stats)
+        if self._update is None:
+            self._update = self._build_update(state)
+        new_state, metrics = self._update(state, stacked_grads, stacked_stats)
+        out = {"loss": metrics["loss"], "records": records}
+        if measure:
+            out["rank_times"] = rank_times
+        return new_state, out
+
+
+def oracle_step(cfg: ModelConfig, opt: OptimizerConfig, state, worker_steps,
+                *, step_key, policy=None):
+    """Single-device reference: the gradient/update a non-distributed
+    trainer computes for the same global pool (rank-major enumeration,
+    identical per-microbatch RNG derivation).  The mesh path must match
+    this to ~float32 resolution — the parity gate in the tier-1 tests."""
+    loss_fn = make_loss_fn(cfg, policy)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    acc = None
+    loss_sum = 0.0
+    n = 0
+    for share in worker_steps:
+        for _bucket, batch in share:
+            rng = jax.random.fold_in(step_key, n)
+            loss, grads = grad_fn(state["params"], batch, rng)
+            acc = (
+                grads
+                if acc is None
+                else jax.tree.map(jnp.add, acc, grads)
+            )
+            loss_sum = loss_sum + loss
+            n += 1
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) / n, acc)
+    new_params, new_opt, stats = adamw_update(
+        state["params"], grads, state["opt"], state["step"], opt
+    )
+    new_state = {
+        "params": new_params,
+        "opt": new_opt,
+        "step": state["step"] + 1,
+    }
+    return new_state, {"loss": loss_sum / n, **stats}
+
+
+def rel_l2(a, b) -> float:
+    """Relative L2 distance between two pytrees (the parity metric)."""
+    num = 0.0
+    den = 0.0
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        xf = np.asarray(x, dtype=np.float64)
+        yf = np.asarray(y, dtype=np.float64)
+        num += float(((xf - yf) ** 2).sum())
+        den += float((yf**2).sum())
+    return float(np.sqrt(num / max(den, 1e-30)))

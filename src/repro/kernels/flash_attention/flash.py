@@ -128,9 +128,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, *rest, scale, kv_tiles, causal, has_segment
 
     @pl.when(kj == kv_tiles - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], LSE_FLOOR)
-        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
-        lse_ref[0, 0] = m_scr[...] + jnp.log(l)
+        denom = jnp.maximum(l_scr[...], LSE_FLOOR)
+        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0] = m_scr[...] + jnp.log(denom)
 
 
 def flash_attention_fwd_pallas(

@@ -5,7 +5,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from .adaln import (
     DEFAULT_D_BLOCK,

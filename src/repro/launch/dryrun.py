@@ -34,7 +34,6 @@ from repro.launch.hlo_stats import collective_stats
 from repro.launch.specs import decode_specs, prefill_specs, train_specs
 from repro.train.steps import (
     make_decode_step,
-    make_denoise_step,
     make_prefill_step,
     make_train_step,
 )

@@ -25,3 +25,24 @@ def make_host_mesh():
         (1, 1), ("data", "model"),
         axis_types=(jax.sharding.AxisType.Auto,) * 2,
     )
+
+
+def make_data_mesh(n_workers: int | None = None):
+    """Pure data-parallel mesh for StepPlan execution (one device per rank).
+
+    This is the mesh ``distributed.plan_exec.PlanExecutor`` consumes: the
+    microbatch streams shard over ``data`` and nothing else.  On a CPU host
+    run with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set
+    before the first jax import — tests/conftest.py and the CI workflow
+    both do) to split the host into N virtual devices."""
+    avail = jax.device_count()
+    n = avail if n_workers is None else n_workers
+    if n < 1:
+        raise ValueError("n_workers must be >= 1")
+    if n > avail:
+        raise ValueError(
+            f"data mesh wants {n} devices but only {avail} are visible; on "
+            f"a CPU host export XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before the first jax import"
+        )
+    return jax.make_mesh((n,), ("data",), devices=jax.devices()[:n])

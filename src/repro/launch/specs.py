@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs.registry import ShapeSpec, get_optimizer
+from repro.configs.registry import ShapeSpec
 from repro.distributed.sharding import ShardingPolicy, sanitize_spec
 from repro.models import transformer as T
 from repro.models.config import ModelConfig

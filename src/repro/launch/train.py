@@ -15,14 +15,6 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_config, get_optimizer, get_smoke_config
-from repro.core import (
-    AdaptiveLoadScheduler,
-    AnalyticDeviceModel,
-    BenchSample,
-    ModelDims,
-    SchedulerConfig,
-    fit_cost_model,
-)
 from repro.core.bucketing import BucketingPolicy, DataShape
 from repro.core.dispatch import DISPATCH_STRATEGIES
 from repro.data.pipeline import BucketedLoader, ShardedBucketedLoader
@@ -32,6 +24,7 @@ from repro.distributed.fault_tolerance import (
     FaultTolerantRunner,
     HeartbeatMonitor,
 )
+from repro.launch.mesh import make_data_mesh
 from repro.optim.adamw import OptimizerConfig
 from repro.train.loop import Trainer
 from repro.train.steps import init_state
@@ -50,13 +43,21 @@ def main() -> None:
     ap.add_argument("--adaptive", action="store_true",
                     help="bucketed AdaptiveLoad data (variable shapes)")
     ap.add_argument("--workers", type=int, default=1,
-                    help="emulated DP ranks fed from one global step plan")
+                    help="DP ranks fed from one global step plan")
     ap.add_argument("--dispatch", default="lpt", choices=DISPATCH_STRATEGIES,
                     help="step-level microbatch dispatch strategy (§4.5)")
+    ap.add_argument("--mesh", action="store_true",
+                    help="execute the step plan SPMD on a data mesh (one "
+                         "device per rank; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N) instead "
+                         "of emulating ranks serially")
     args = ap.parse_args()
     if args.workers > 1 and not args.adaptive:
         ap.error("--workers > 1 requires --adaptive (the fixed-shape stream "
                  "has no planner to shard)")
+    if args.mesh and not args.adaptive:
+        ap.error("--mesh requires --adaptive (mesh execution consumes the "
+                 "planner's per-rank streams)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -97,7 +98,7 @@ def main() -> None:
         return make_lm_batch(key, b, s, cfg.vocab, cfg)
 
     if buckets is not None:
-        if args.workers > 1:
+        if args.mesh or args.workers > 1:
             # global step plan: one pool per step, packed across ranks by
             # quadratic load, instead of independent per-rank draws
             loader = ShardedBucketedLoader(
@@ -133,7 +134,8 @@ def main() -> None:
         cadence=CheckpointCadence(ckpt_cost_s=0.5, mtbf_s=3600.0, min_interval_steps=10),
         monitor=HeartbeatMonitor(n_workers=1, timeout_s=1e9),
     )
-    trainer = Trainer(cfg, opt, ft=ft)
+    mesh = make_data_mesh(args.workers) if args.mesh else None
+    trainer = Trainer(cfg, opt, ft=ft, mesh=mesh)
     state, hist = trainer.run(
         state, data_iter, args.steps, rng=jax.random.PRNGKey(1), log_every=10
     )

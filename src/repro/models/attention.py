@@ -87,7 +87,7 @@ def blocked_attention(
 
     @jax.checkpoint  # recompute per-block scores in bwd: the scan must not
     def body(carry, xs):  # stack [n_blocks, B, H, Sq, kb] f32 residuals
-        m, l, acc = carry
+        m, denom, acc = carry
         kj, vj, segj, j = xs
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32))
         k_pos = j * kv_block + jnp.arange(kv_block)
@@ -105,19 +105,19 @@ def blocked_attention(
         p = jnp.exp(s - m_new[..., None])
         if mask is not None:
             p = jnp.where(mask, p, 0.0)  # exact zeros on fully-masked rows
-        l_new = l * corr + p.sum(axis=-1)
+        denom_new = denom * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhqk,bkhd->bhqd", p, vj.astype(jnp.float32)
         )
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     m0 = jnp.full((b, h, sq), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    d0 = jnp.zeros((b, h, sq), jnp.float32)
     a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
-    (m, l, acc), _ = jax.lax.scan(
-        body, (m0, l0, a0), (kb, vb, seg_b, jnp.arange(n_blocks))
+    (m, denom, acc), _ = jax.lax.scan(
+        body, (m0, d0, a0), (kb, vb, seg_b, jnp.arange(n_blocks))
     )
-    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    out = acc / jnp.maximum(denom, 1e-37)[..., None]
     return out.swapaxes(1, 2).astype(q.dtype)  # [B, Sq, H, dh]
 
 

@@ -17,7 +17,6 @@ assembled in ``models/mmdit.py``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 
 @dataclasses.dataclass(frozen=True)

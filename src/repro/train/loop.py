@@ -9,11 +9,18 @@ without draining it.
 The loop consumes either a single-rank stream (``BucketedLoader``: each
 item is one ``list[(bucket, batch)]``) or a planner-driven multi-rank
 stream (``ShardedBucketedLoader``: each item is per-worker lists from one
-global dispatch decision).  In the multi-rank case this host emulates every
-DP rank serially, but telemetry is recorded **per worker and per
-microbatch** — each microbatch is timed individually (``float(loss)``
-blocks on the device), so the cost-model refit sees honest ``(B, S, t)``
-pairs and ``straggler_workers()`` sees every rank, not just worker 0.
+global dispatch decision).  Two execution modes for the multi-rank case:
+
+* **emulated** (default) — this host plays every DP rank serially with an
+  optimizer update per microbatch; telemetry is recorded **per worker and
+  per microbatch** — each microbatch is timed individually (``float(loss)``
+  blocks on the device), so the cost-model refit sees honest ``(B, S, t)``
+  pairs and ``straggler_workers()`` sees every rank, not just worker 0.
+* **mesh** (``mesh=``) — real SPMD: rank ``r``'s microbatches run on mesh
+  device ``r`` via ``distributed.plan_exec.PlanExecutor``, grads accumulate
+  locally per rank and meet in one ``psum``, one optimizer update per step
+  (proper data parallelism).  With a scheduler attached the executor runs
+  in measuring mode so the same per-microbatch telemetry feeds the loop.
 """
 
 from __future__ import annotations
@@ -27,6 +34,7 @@ import jax
 from repro.core.scheduler import AdaptiveLoadScheduler
 from repro.core.telemetry import WorkerStepRecord
 from repro.distributed.fault_tolerance import FaultTolerantRunner
+from repro.distributed.plan_exec import PlanExecutor, worker_steps_digest
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.steps import make_train_step
@@ -56,6 +64,9 @@ class Trainer:
         ft: FaultTolerantRunner | None = None,
         donate: bool = True,
         worker_time_scale: Mapping[int, float] | None = None,
+        mesh=None,
+        measure_ranks: bool | None = None,
+        check_agreement: bool = False,
     ):
         self.cfg = cfg
         self.opt = opt
@@ -69,6 +80,25 @@ class Trainer:
         # *recorded* compute time to model degraded hardware — lets tests and
         # examples exercise the scheduler's straggler path end to end.
         self._worker_time_scale = dict(worker_time_scale or {})
+        # SPMD mode: lower each step's plan onto the mesh instead of
+        # emulating ranks serially.  measure_ranks=True blocks per
+        # microbatch for honest per-rank timing (needed for telemetry;
+        # default: only when a scheduler consumes it).
+        self._executor = (
+            PlanExecutor(mesh, cfg, opt, policy=policy, donate=donate)
+            if mesh is not None
+            else None
+        )
+        self._measure_ranks = (
+            measure_ranks
+            if measure_ranks is not None
+            else scheduler is not None
+        )
+        # Per-step digest all-gather: off by default — a single-process
+        # Trainer derives every rank's digest from the same local fan-out,
+        # so the collective can only ever agree (pure overhead).  Turn on
+        # in multi-host deployments where each host passes its own digest.
+        self._check_agreement = check_agreement
 
     def _jit_for(self, batch) -> tuple[Callable, bool]:
         """Returns the jitted step fn and whether this signature is fresh
@@ -94,6 +124,48 @@ class Trainer:
             return step
         return [step]
 
+    def _emulated_step(self, state, worker_steps, rng, i):
+        """Serial single-host emulation: every rank's microbatches run on
+        the default device, one optimizer update per microbatch."""
+        loss_acc, n_micro = 0.0, 0
+        recs: list[WorkerStepRecord] = []
+        for w, step_batches in enumerate(worker_steps):
+            scale = self._worker_time_scale.get(w, 1.0)
+            for bucket, batch in step_batches:  # accumulation microbatches
+                rng, sub = jax.random.split(rng)
+                fn, fresh = self._jit_for(batch)
+                tb = time.perf_counter()
+                state, metrics = fn(state, batch, sub)
+                loss_acc += float(metrics["loss"])  # blocks on device
+                mb_dt = time.perf_counter() - tb
+                if not fresh:  # compile steps don't enter telemetry
+                    recs.append(
+                        WorkerStepRecord(
+                            step=i, worker=w,
+                            batch_size=bucket.batch_size, seq_len=bucket.seq_len,
+                            compute_time=mb_dt * scale,
+                        )
+                    )
+                n_micro += 1
+        return state, loss_acc / max(n_micro, 1), recs, rng
+
+    def _mesh_step(self, state, worker_steps, step_key, i):
+        """SPMD execution: one plan, one psum, one update (plan_exec)."""
+        digests = None
+        if self._check_agreement:
+            digest = worker_steps_digest(worker_steps)
+            digests = [digest] * self._executor.n_ranks
+        state, out = self._executor.execute(
+            state,
+            worker_steps,
+            step_key=step_key,
+            step=i,
+            digests=digests,
+            measure=self._measure_ranks,
+            time_scale=lambda w: self._worker_time_scale.get(w, 1.0),
+        )
+        return state, float(out["loss"]), out["records"]
+
     def run(
         self,
         state,
@@ -106,34 +178,26 @@ class Trainer:
     ):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         hist = TrainHistory()
+        if self._executor is not None and not self._executor.is_placed(state):
+            state = self._executor.place_state(state)
         for i in range(n_steps):
             worker_steps = self._as_worker_steps(next(data_iter))
             t0 = time.perf_counter()
-            loss_acc, tok, n_micro = 0.0, 0, 0
-            recs: list[WorkerStepRecord] = []
-            for w, step_batches in enumerate(worker_steps):
-                scale = self._worker_time_scale.get(w, 1.0)
-                for bucket, batch in step_batches:  # accumulation microbatches
-                    rng, sub = jax.random.split(rng)
-                    fn, fresh = self._jit_for(batch)
-                    tb = time.perf_counter()
-                    state, metrics = fn(state, batch, sub)
-                    loss_acc += float(metrics["loss"])  # blocks on device
-                    mb_dt = time.perf_counter() - tb
-                    if not fresh:  # compile steps don't enter telemetry
-                        recs.append(
-                            WorkerStepRecord(
-                                step=i, worker=w,
-                                batch_size=bucket.batch_size, seq_len=bucket.seq_len,
-                                compute_time=mb_dt * scale,
-                            )
-                        )
-                    tok += bucket.tokens
-                    n_micro += 1
+            tok = sum(
+                bucket.tokens for ws in worker_steps for bucket, _ in ws
+            )
+            n_micro = sum(len(ws) for ws in worker_steps)
+            if self._executor is not None:
+                rng, sub = jax.random.split(rng)
+                state, loss, recs = self._mesh_step(state, worker_steps, sub, i)
+            else:
+                state, loss, recs, rng = self._emulated_step(
+                    state, worker_steps, rng, i
+                )
             jax.block_until_ready(state["step"])
             dt = time.perf_counter() - t0
 
-            hist.losses.append(loss_acc / max(n_micro, 1))
+            hist.losses.append(loss)
             hist.step_times.append(dt)
             hist.tokens.append(tok)
 

@@ -1,10 +1,16 @@
 """Shared test fixtures/shims.
 
-Two concerns:
+Three concerns:
 
 * make ``pytest`` runnable from the repo root without exporting
   ``PYTHONPATH=src`` by hand (the Makefile does it anyway; this is a belt
-  for ad-hoc invocations), and
+  for ad-hoc invocations),
+* give the suite a multi-device host platform: the SPMD plan-execution
+  tests need >= 4 devices, and ``--xla_force_host_platform_device_count``
+  only takes effect if set before jax initializes its backends — conftest
+  imports before any test module, so this is the one reliable hook.  An
+  operator-provided ``XLA_FLAGS`` (e.g. CI's) always wins, and nothing is
+  touched if jax is somehow already imported, and
 * keep the property-based test modules importable when ``hypothesis`` is
   not installed (offline images): a minimal stand-in is registered in
   ``sys.modules`` so ``from hypothesis import given, settings, strategies``
@@ -14,6 +20,7 @@ Two concerns:
 
 from __future__ import annotations
 
+import os
 import pathlib
 import sys
 import types
@@ -23,6 +30,14 @@ import pytest
 _SRC = pathlib.Path(__file__).resolve().parent.parent / "src"
 if str(_SRC) not in sys.path:
     sys.path.insert(0, str(_SRC))
+
+if "jax" not in sys.modules and "xla_force_host_platform_device_count" not in (
+    os.environ.get("XLA_FLAGS") or ""
+):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4"
+    ).strip()
 
 try:
     import hypothesis  # noqa: F401  — real library wins when present

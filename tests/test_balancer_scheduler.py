@@ -7,7 +7,6 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (
     AdaptiveLoadScheduler,
     AnalyticDeviceModel,
-    CostModel,
     ModelDims,
     SchedulerConfig,
     WorkerStepRecord,

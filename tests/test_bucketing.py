@@ -1,6 +1,5 @@
 """Unit + property tests for the dual-constraint bucketing (paper Eq. 2)."""
 
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st

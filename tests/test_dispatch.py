@@ -237,6 +237,195 @@ class TestShardedLoader:
                 next(loader)
         list(it)  # the per-rank generator terminates too instead of hanging
 
+    def _wait_depth(self, loader, depth, timeout=10.0):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            with loader._cv:
+                if min(len(d) for d in loader._pending) >= depth:
+                    return
+            time.sleep(0.02)
+        raise AssertionError(f"producer never queued {depth} steps")
+
+    def test_resize_preserves_queued_microbatches_exactly_once(self):
+        """4 -> 3 elastic shrink: every already-queued microbatch survives
+        the fan-out rebuild exactly once (no dupes, no drops), grouped per
+        original plan boundary so ranks stay in lockstep."""
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=4, budget=3 * 2e8, budget_of=LOAD, seed=5, prefetch=4,
+        )
+        try:
+            self._wait_depth(loader, 4)
+            with loader._cv:
+                expected = sorted(
+                    id(batch)
+                    for d in loader._pending
+                    for _seq, share in d
+                    for _, batch in share
+                )
+                depth = max(len(d) for d in loader._pending)
+            loader.resize(3)
+            got = []
+            for _ in range(depth):
+                step = next(loader)
+                assert len(step) == 3
+                got.extend(id(b) for ws in step for _, b in ws)
+            assert sorted(got) == expected
+            # fresh plans target the new fan-out too
+            assert len(next(loader)) == 3
+            assert loader.planner.n_workers == 3
+        finally:
+            loader.close()
+
+    def test_resize_grow_and_worker_iter_shrink(self):
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=2, budget=3 * 2e8, budget_of=LOAD, seed=7,
+        )
+        try:
+            next(loader)
+            loader.resize(4)
+            deadline = time.time() + 10.0
+            while time.time() < deadline:
+                if len(next(loader)) == 4:
+                    break
+            else:
+                raise AssertionError("grow to 4 ranks never materialized")
+            # a rank that leaves sees its stream end instead of hanging
+            it = loader.worker_iter(3)
+            next(it)
+            loader.resize(2)
+            deadline = time.time() + 10.0
+            ended = False
+            while time.time() < deadline and not ended:
+                try:
+                    next(it)
+                except StopIteration:
+                    ended = True
+            assert ended, "departed rank's iterator never terminated"
+        finally:
+            loader.close()
+
+    def test_stalled_rank_bounds_producer_memory(self):
+        """Regression: backpressure keys on the DEEPEST rank queue — one
+        stalled consumer must cap the pipeline at ~prefetch steps, not let
+        its backlog (materialized ndarrays) grow without bound."""
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=3, budget=3 * 2e8, budget_of=LOAD, seed=3, prefetch=2,
+        )
+        try:
+            it = loader.worker_iter(0)
+            for _ in range(2):  # drain rank 0 only; ranks 1-2 stall
+                next(it)
+            time.sleep(0.5)  # give a runaway producer time to run away
+            with loader._cv:
+                deepest = max(len(d) for d in loader._pending)
+            assert deepest <= 2, (
+                f"stalled rank accumulated {deepest} steps (prefetch=2)"
+            )
+        finally:
+            loader.close()
+
+    def test_resize_grow_never_emits_empty_rank_shares(self):
+        """Regression: a queued step too small for the new fan-out (2
+        microbatches, grow to 4 ranks) must carry into the next step, not
+        reach consumers as empty rank shares (the mesh executor rejects
+        those)."""
+        # budget == one bucket's load -> each plan has ~2 microbatches
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=2, budget=2e8, budget_of=LOAD, seed=13, prefetch=2,
+        )
+        try:
+            self._wait_depth(loader, 1)
+            loader.resize(4)
+            deadline = time.time() + 10.0
+            saw_4 = False
+            while time.time() < deadline and not saw_4:
+                step = next(loader)
+                assert all(len(ws) >= 1 for ws in step), (
+                    f"empty rank share after grow: {[len(w) for w in step]}"
+                )
+                saw_4 = len(step) == 4
+            assert saw_4, "4-rank steps never materialized after grow"
+        finally:
+            loader.close()
+
+    def test_resize_after_uneven_worker_iter_consumption(self):
+        """Regression: shares are regrouped by their plan-sequence tag, so a
+        resize after one rank's worker_iter ran ahead still preserves every
+        un-consumed microbatch exactly once (deque *position* no longer
+        stands in for plan identity)."""
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=2, budget=3 * 2e8, budget_of=LOAD, seed=21, prefetch=3,
+        )
+        try:
+            self._wait_depth(loader, 3)
+            it0 = loader.worker_iter(0)
+            for _ in range(2):  # rank 0 runs ahead; rank 1 stalls
+                next(it0)
+            with loader._cv:
+                expected = {
+                    id(batch)
+                    for d in loader._pending
+                    for _seq, share in d
+                    for _, batch in share
+                }
+            loader.resize(3)
+            seen: list[int] = []
+            deadline = time.time() + 15.0
+            while time.time() < deadline and not expected.issubset(seen):
+                step = next(loader)
+                assert len(step) == 3
+                assert all(len(ws) >= 1 for ws in step)
+                seen.extend(id(b) for ws in step for _, b in ws)
+            assert expected.issubset(seen), "some queued microbatches were lost"
+            for i in expected:  # and none were duplicated
+                assert seen.count(i) == 1
+        finally:
+            loader.close()
+
+    def test_close_during_resize_storm_no_deadlock(self):
+        """Regression: close() during an in-flight resize() used to be able
+        to observe (and leak) a partially rebuilt queue fan-out; they are
+        now mutually exclusive and always terminate."""
+        import threading
+
+        loader = ShardedBucketedLoader(
+            BUCKETS, WEIGHTS, _make_batch,
+            n_workers=4, budget=3 * 2e8, budget_of=LOAD, seed=1,
+        )
+        stop = threading.Event()
+        errors = []
+
+        def resizer():
+            n = 2
+            while not stop.is_set():
+                try:
+                    loader.resize(n)
+                except RuntimeError:
+                    return  # loader closed under us: the defined behavior
+                except Exception as e:  # noqa: BLE001
+                    errors.append(e)
+                    return
+                n = 6 - n  # 2 <-> 4
+
+        t = threading.Thread(target=resizer)
+        t.start()
+        time.sleep(0.3)
+        t0 = time.perf_counter()
+        loader.close()
+        stop.set()
+        t.join(5.0)
+        assert time.perf_counter() - t0 < 5.0
+        assert not t.is_alive()
+        assert not loader._thread.is_alive()
+        assert not errors, errors
+        with pytest.raises(RuntimeError):
+            loader.resize(3)
+
     def test_empty_buckets_rejected(self):
         with pytest.raises(ValueError):
             ShardedBucketedLoader(
@@ -303,15 +492,17 @@ class TestSchedulerDispatchIntegration:
         try:
             next(loader)
             assert loader.planner is planner
-            # a resize reaches the shared planner; the mis-sized loader must
-            # fail loudly instead of silently mis-sharding
+            # a resize reaches the shared planner; the loader adopts the new
+            # fan-out in place (elastic) instead of mis-sharding or crashing
             sch.resize(3)
             assert planner.n_workers == 3
-            with pytest.raises(RuntimeError) as excinfo:
-                deadline = time.time() + 10.0
-                while time.time() < deadline:
-                    next(loader)
-            assert "rebuild" in str(excinfo.value.__cause__)
+            deadline = time.time() + 10.0
+            while time.time() < deadline:
+                step = next(loader)
+                if len(step) == 3:
+                    break
+            assert len(step) == 3, "loader never adopted the 3-rank fan-out"
+            assert loader.n_workers == 3
         finally:
             loader.close()
         with pytest.raises(ValueError):
@@ -350,11 +541,12 @@ class TestSchedulerDispatchIntegration:
             dtype="float32",
         )
         opt = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
-        # threshold 3.0, slowdown 10x: microbatches here are ~ms-scale, and
+        # threshold 4.0, slowdown 10x: microbatches here are ~ms-scale, and
         # the single-host emulation runs rank 0's microbatches while the
-        # prefetch thread builds the next step's batches, so healthy ranks
-        # can show ~2x timing noise that a real per-device cluster wouldn't
-        sch = self._scheduler(n_workers=4, straggler_threshold=3.0)
+        # prefetch thread builds the next step's batches (jax work on the
+        # same device), so healthy ranks can show ~2-3x timing noise that a
+        # real per-device cluster wouldn't
+        sch = self._scheduler(n_workers=4, straggler_threshold=4.0)
         sch.make_planner(seed=0)
         m_comp_before = sch.policy.m_comp
 
@@ -380,7 +572,7 @@ class TestSchedulerDispatchIntegration:
         assert workers_seen == {0, 1, 2, 3}
         derates = [u for u in sch.updates if "straggler derate" in u.reason]
         assert derates, f"no derate fired; updates={[u.reason for u in sch.updates]}"
-        assert "2" in derates[0].reason
+        assert any("2" in u.reason for u in derates), [u.reason for u in derates]
         assert sch.policy.m_comp < m_comp_before
         # per-microbatch timing: records carry the microbatch's own (B, S),
         # not a step-mean smear

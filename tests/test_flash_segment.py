@@ -27,7 +27,6 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
 from repro.models.attention import (
     blocked_attention,
-    repeat_kv,
     segment_relative_positions,
 )
 

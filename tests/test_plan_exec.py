@@ -1,0 +1,279 @@
+"""Mesh execution of step plans: SPMD dispatch, agreement, elasticity.
+
+These tests need >= 4 devices; ``tests/conftest.py`` forces
+``--xla_force_host_platform_device_count=4`` before jax initializes (CI
+sets the same flag explicitly), so they run everywhere the tier-1 suite
+runs and skip only if an operator overrode the flag.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax = pytest.importorskip("jax")
+
+from repro.core import CostModel  # noqa: E402
+from repro.core.bucketing import Bucket, BucketingPolicy, DataShape  # noqa: E402
+from repro.core.dispatch import StepPlanner, plan_digest  # noqa: E402
+from repro.data.packing import PackedBucket, packed_bucket_pool  # noqa: E402
+from repro.data.pipeline import make_packed_batch  # noqa: E402
+from repro.data.synthetic import make_lm_batch  # noqa: E402
+from repro.distributed.plan_exec import (  # noqa: E402
+    PlanAgreementError,
+    PlanExecutor,
+    oracle_step,
+    rel_l2,
+    worker_steps_digest,
+)
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.adamw import OptimizerConfig  # noqa: E402
+from repro.train.steps import init_state  # noqa: E402
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 (virtual) devices"
+)
+
+CFG = ModelConfig(
+    name="plan-exec-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, head_dim=16, d_ff=64, vocab=64, dtype="float32",
+)
+OPT = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+
+SHAPES = [
+    DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4), DataShape(17, 64, 64, 4)
+]
+BUCKETS = BucketingPolicy(m_mem=2_000, m_comp=3e5, p=2.0).make_buckets(SHAPES)
+
+
+def _planner(n_workers=4, seed=0, budget=2 * 3e5):
+    return StepPlanner(
+        BUCKETS, None, n_workers=n_workers, budget=budget,
+        budget_of=lambda b: b.load(2.0), strategy="lpt", seed=seed,
+    )
+
+
+def _worker_steps(plan, seed=0):
+    rng = np.random.default_rng(seed)
+    batches = {}
+    for i, b in enumerate(plan.microbatches):
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        batches[i] = jax.device_get(
+            make_lm_batch(key, b.batch_size, b.seq_len, CFG.vocab)
+        )
+    return [
+        [(plan.microbatches[i], batches[i]) for i in g]
+        for g in plan.assignments
+    ]
+
+
+@needs_mesh
+class TestMeshExecution:
+    def test_heterogeneous_shape_grads_match_single_device_oracle(self):
+        """Ranks mid-plan on *different* bucket shapes produce the same
+        reduced gradient/update as one device processing the whole pool —
+        the acceptance gate (rel-L2 <= 1e-5 at f32)."""
+        plan = _planner().plan()
+        # the pool really is heterogeneous: >1 distinct shape in flight
+        assert len({m.seq_len for m in plan.microbatches}) > 1
+        worker_steps = _worker_steps(plan)
+        mesh = make_data_mesh(4)
+        ex = PlanExecutor(mesh, CFG, OPT)
+        state = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        key = jax.random.PRNGKey(7)
+        mesh_state, out = ex.execute(
+            ex.place_state(state), worker_steps, step_key=key,
+            digests=[plan.digest()] * 4,
+        )
+        ref_state, ref_out = oracle_step(
+            CFG, OPT, state, worker_steps, step_key=key
+        )
+        assert rel_l2(
+            jax.device_get(mesh_state["params"]),
+            jax.device_get(ref_state["params"]),
+        ) <= 1e-5
+        assert float(out["loss"]) == pytest.approx(float(ref_out["loss"]), rel=1e-6)
+        assert int(jax.device_get(mesh_state["step"])) == 1
+
+    def test_state_threads_through_multiple_steps(self):
+        plan = _planner(seed=3).plan()
+        ws = _worker_steps(plan, seed=3)
+        mesh = make_data_mesh(4)
+        ex = PlanExecutor(mesh, CFG, OPT)
+        state = ex.place_state(init_state(jax.random.PRNGKey(0), CFG, OPT))
+        for i in range(3):
+            state, out = ex.execute(
+                state, ws, step_key=jax.random.PRNGKey(i), step=i, measure=True
+            )
+        assert int(jax.device_get(state["step"])) == 3
+        # measuring mode produced per-rank times and telemetry for all ranks
+        assert len(out["rank_times"]) == 4
+        assert {r.worker for r in out["records"]} == {0, 1, 2, 3}
+
+    def test_agreement_allgather_trips_on_divergence(self):
+        plan = _planner(seed=1).plan()
+        ws = _worker_steps(plan, seed=1)
+        mesh = make_data_mesh(4)
+        ex = PlanExecutor(mesh, CFG, OPT)
+        state = ex.place_state(init_state(jax.random.PRNGKey(0), CFG, OPT))
+        good = [plan.digest()] * 4
+        ex.verify_agreement(good)  # unanimous: no raise
+        bad = list(good)
+        bad[2] = bytes(32)
+        with pytest.raises(PlanAgreementError) as e:
+            ex.execute(state, ws, step_key=jax.random.PRNGKey(0), digests=bad)
+        assert "2" in str(e.value)
+
+    def test_shrunken_fanout_idles_surplus_devices_exactly(self):
+        """Elastic shrink: a 3-rank plan on a 4-device mesh executes with
+        one idle device and still matches the single-device oracle — zero
+        contributions keep the pool mean exact."""
+        plan = _planner(n_workers=3).plan()
+        ws = _worker_steps(plan)
+        ex = PlanExecutor(make_data_mesh(4), CFG, OPT)
+        state = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        key = jax.random.PRNGKey(9)
+        mesh_state, out = ex.execute(
+            ex.place_state(state), ws, step_key=key, measure=True
+        )
+        ref_state, _ = oracle_step(CFG, OPT, state, ws, step_key=key)
+        assert rel_l2(
+            jax.device_get(mesh_state["params"]),
+            jax.device_get(ref_state["params"]),
+        ) <= 1e-5
+        assert len(out["rank_times"]) == 4
+        assert out["rank_times"][3] == 0.0  # the idle device did no work
+
+    def test_fanout_beyond_mesh_rejected(self):
+        plan = _planner(n_workers=5).plan()
+        ws = _worker_steps(plan)
+        ex = PlanExecutor(make_data_mesh(4), CFG, OPT)
+        state = ex.place_state(init_state(jax.random.PRNGKey(0), CFG, OPT))
+        with pytest.raises(ValueError, match="5 ranks"):
+            ex.execute(state, ws, step_key=jax.random.PRNGKey(0))
+
+    def test_packed_buckets_execute_on_mesh(self):
+        """PR 2's packed variable-length microbatches ride the same SPMD
+        path: segment-id batches, predict_packed loads, digestable plans."""
+        rng = np.random.default_rng(0)
+        lengths = np.clip(
+            rng.lognormal(np.log(40), 0.8, 48).astype(int), 8, 128
+        )
+        pool = packed_bucket_pool(lengths, window=128, batch_windows=2, p=2.0)
+        cm = CostModel(a=0.0, b=1.0, p=2.0, r2=1.0)
+        planner = StepPlanner(
+            pool, None, n_workers=4,
+            budget=2 * max(cm.load_of(b) for b in pool),
+            budget_of=cm.load_of, strategy="lpt", seed=0,
+        )
+        plan = planner.plan()
+        assert any(isinstance(m, PackedBucket) for m in plan.microbatches)
+        assert plan.digest() == plan_digest(plan)  # packed kind is digestable
+        ws = [
+            [
+                (m, make_packed_batch(np.random.default_rng(i), m, vocab=CFG.vocab))
+                for i, m in enumerate(plan.worker_microbatches(w))
+            ]
+            for w in range(4)
+        ]
+        ex = PlanExecutor(make_data_mesh(4), CFG, OPT)
+        state = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        key = jax.random.PRNGKey(5)
+        mesh_state, out = ex.execute(ex.place_state(state), ws, step_key=key)
+        ref_state, _ = oracle_step(CFG, OPT, state, ws, step_key=key)
+        assert rel_l2(
+            jax.device_get(mesh_state["params"]),
+            jax.device_get(ref_state["params"]),
+        ) <= 1e-5
+        assert np.isfinite(float(out["loss"]))
+
+
+class TestPlanAgreement:
+    """Two hosts with the same seed + telemetry snapshot must derive
+    byte-identical plans — the no-central-prefetch property."""
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n_workers=st.integers(1, 8),
+        strategy=st.sampled_from(["random", "lpt", "knapsack"]),
+        steps=st.integers(1, 4),
+    )
+    def test_same_seed_same_plan_bytes(self, seed, n_workers, strategy, steps):
+        a = StepPlanner(
+            BUCKETS, None, n_workers=n_workers, budget=2 * 3e5,
+            budget_of=lambda b: b.load(2.0), strategy=strategy, seed=seed,
+        )
+        b = StepPlanner(
+            BUCKETS, None, n_workers=n_workers, budget=2 * 3e5,
+            budget_of=lambda b: b.load(2.0), strategy=strategy, seed=seed,
+        )
+        for _ in range(steps):
+            pa, pb = a.plan(), b.plan()
+            assert pa.digest() == pb.digest()
+            assert pa.assignments == pb.assignments
+
+    def test_digest_sensitive_to_every_plan_field(self):
+        plan = _planner(seed=2).plan()
+        d0 = plan_digest(plan)
+        import dataclasses
+
+        reassigned = dataclasses.replace(
+            plan, assignments=tuple(reversed(plan.assignments))
+        )
+        assert plan_digest(reassigned) != d0
+        reloaded = dataclasses.replace(
+            plan, loads=tuple(x * 2 for x in plan.loads)
+        )
+        assert plan_digest(reloaded) != d0
+        restrat = dataclasses.replace(plan, strategy="knapsack")
+        assert plan_digest(restrat) != d0
+
+    def test_divergent_seeds_diverge(self):
+        assert _planner(seed=0).plan().digest() != _planner(seed=1).plan().digest()
+
+    def test_worker_steps_digest_tracks_fanout(self):
+        plan = _planner(seed=4).plan()
+        ws = _worker_steps(plan, seed=4)
+        d = worker_steps_digest(ws)
+        assert d == worker_steps_digest(ws)
+        swapped = list(reversed(ws))
+        assert worker_steps_digest(swapped) != d
+
+    def test_unknown_microbatch_kind_rejected(self):
+        class Alien:
+            batch_size, seq_len, tokens = 1, 8, 8
+
+        from repro.core.dispatch import microbatch_key
+
+        with pytest.raises(TypeError, match="digest_key"):
+            microbatch_key(Alien())
+
+    def test_bucket_and_packed_keys_are_canonical(self):
+        from repro.core.dispatch import microbatch_key
+
+        b = Bucket(DataShape(1, 64, 64, 4), 7)
+        assert microbatch_key(b) == microbatch_key(
+            Bucket(DataShape(1, 64, 64, 4), 7)
+        )
+        pool = packed_bucket_pool([16, 16, 8], window=32)
+        assert microbatch_key(pool[0]) == pool[0].digest_key()
+
+    def test_packed_digest_distinguishes_window_partitions(self):
+        """Same documents, different window partition => different batch
+        shape => the digest must differ (a flattened-lengths hash would
+        wave a mismatched collective through agreement)."""
+        from repro.data.packing import PackedBucket, PackedWindow
+
+        one = PackedBucket(
+            (PackedWindow((0, 1), 8, 0.0, (5, 3)),), window=8
+        )
+        two = PackedBucket(
+            (
+                PackedWindow((0,), 5, 0.0, (5,)),
+                PackedWindow((1,), 3, 0.0, (3,)),
+            ),
+            window=8,
+        )
+        assert one.lengths == two.lengths  # same flattened documents...
+        assert one.digest_key() != two.digest_key()  # ...different identity

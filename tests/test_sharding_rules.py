@@ -3,10 +3,7 @@ that divides its shape (on a fabricated 16x16 mesh of CPU stand-ins this is
 pure metadata — no allocation, no 512-device env needed because we validate
 the arithmetic, not the compile)."""
 
-import math
-
 import jax
-import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
@@ -14,7 +11,6 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.registry import ARCHS, get_config
 from repro.distributed.sharding import axes_size, sanitize_spec
 from repro.models import transformer as T
-from repro.models.config import ModelConfig
 
 
 class FakeMesh:

@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, checkpointing, fault tolerance, compression,
 data pipeline, packing, sharding rules."""
 
-import os
 import time
 
 import jax
