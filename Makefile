@@ -19,13 +19,20 @@ bench-dispatch:
 # the CI perf gate: tiny corpus, JSON artifact, thresholds.json enforced
 bench-smoke:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
-		--only dispatch --smoke --json bench_smoke.json
+		--only dispatch --smoke --json benchmarks/out/bench_smoke.json
 
 # real SPMD dispatch on 4 virtual host devices (measured per-rank CV)
 bench-mesh:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 		--only dispatch --smoke --mesh
+
+# overlapped execution engine: async device-timed dispatch vs the serial
+# measured baseline, plus background knapsack refinement adoption
+bench-overlap:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --mesh --overlap
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention

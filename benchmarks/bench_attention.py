@@ -11,7 +11,7 @@ Measures, on a packed variable-length batch from the LM corpus:
   naive ``predict(B, S)``, and the correlation of executed tiles with the
   per-segment load across windows.
 
-Results are emitted as JSON (``bench_attention.json``) for the bench
+Results are emitted as JSON (``benchmarks/out/bench_attention.json``) for the bench
 trajectory, plus the usual CSV row.
 """
 
@@ -30,7 +30,7 @@ from repro.kernels.flash_attention.flash import attention_tile_counts
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_reference
 
-from .common import csv_row, time_fn
+from .common import csv_row, out_path, time_fn
 
 WINDOW = 1024
 HEADS = 2
@@ -161,9 +161,10 @@ def run(csv: list[str]) -> dict:
         f"predict_packed) over {len(corr_windows)} windows = {corr:.3f}"
     )
 
-    with open("bench_attention.json", "w") as f:
+    path = out_path("bench_attention.json")
+    with open(path, "w") as f:
         json.dump(result, f, indent=2)
-    print("[attention] JSON -> bench_attention.json")
+    print(f"[attention] JSON -> {path}")
 
     csv.append(
         csv_row(

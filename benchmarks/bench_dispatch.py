@@ -18,6 +18,11 @@ draws on BOTH mean compute-CV and simulated throughput.
 jax data mesh via ``distributed.plan_exec.PlanExecutor`` (on CPU, virtual
 devices from ``--xla_force_host_platform_device_count``), reporting
 measured per-rank step-time CV and the mesh-vs-oracle gradient parity.
+``--overlap`` (with ``--mesh``) benchmarks the overlapped execution
+engine: async device-timed dispatch vs the serial measured-mode baseline
+(wall-clock step time must not regress while per-rank telemetry stays
+populated and gradients stay oracle-exact), plus the background knapsack
+refinement's adoption rate and makespan win over its LPT seed.
 ``--smoke`` shrinks the corpus/steps for the CI gate (< 60 s).
 """
 
@@ -45,10 +50,15 @@ ACCUMULATION = 3  # microbatches' worth of load per rank per step
 SEED = 7
 
 
-def run(csv: list[str], smoke: bool = False, mesh: bool = False) -> dict:
+def run(
+    csv: list[str], smoke: bool = False, mesh: bool = False,
+    overlap: bool = False,
+) -> dict:
+    if overlap and not mesh:
+        raise SystemExit("--overlap benchmarks mesh execution; pass --mesh")
     out = _run_sim(csv, n_steps=60 if smoke else N_STEPS, strict=not smoke)
     if mesh:
-        out["mesh"] = run_mesh(csv, smoke=smoke)
+        out["mesh"] = run_mesh(csv, smoke=smoke, overlap=overlap)
     return out
 
 
@@ -165,7 +175,7 @@ MESH_SHAPES = [
 MESH_WEIGHTS = [0.32, 0.28, 0.18, 0.12, 0.10]
 
 
-def run_mesh(csv: list[str], smoke: bool = False) -> dict:
+def run_mesh(csv: list[str], smoke: bool = False, overlap: bool = False) -> dict:
     """Execute planned vs independent dispatch SPMD and measure reality.
 
     Flow: dual-constraint buckets over the mini corpus -> warm the executor
@@ -237,7 +247,7 @@ def run_mesh(csv: list[str], smoke: bool = False) -> dict:
             state, out = ex.execute(
                 state, ws, step_key=jax.random.PRNGKey(1000 + i), step=i,
                 digests=[worker_steps_digest(ws)] * MESH_WORKERS,
-                measure=True,
+                measure="serial",
             )
             rt = np.asarray(out["rank_times"])
             cvs.append(float(rt.std() / rt.mean()))
@@ -328,6 +338,155 @@ def run_mesh(csv: list[str], smoke: bool = False) -> dict:
             f"planned-LPT measured per-rank step-time CV "
             f"{lpt['mean_step_cv']:.3f} above the 0.10 acceptance line"
         )
+    if overlap:
+        out["overlap"] = _run_overlap(
+            csv, ex, planner, make_batch, state, state0, n_steps,
+        )
+    return out
+
+
+def _run_overlap(csv, ex, planner, make_batch, state, state0, n_steps) -> dict:
+    """Overlapped execution engine vs the serial measured baseline.
+
+    Identical planned fan-outs run twice through the SAME warmed executor:
+    once with ``measure="serial"`` (host blocks per microbatch — telemetry
+    serializes the ranks it measures) and once with ``measure="async"``
+    (device-timed per-rank observers, tail-sentinel join).  The acceptance
+    line: async wall-clock step time <= serial, per-rank records still
+    populated, gradients still oracle-exact.  A second section measures the
+    background knapsack refinement: adoption rate and the adopted plans'
+    makespan vs their LPT seeds.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.distributed.plan_exec import oracle_step, rel_l2
+
+    def planned_ws():
+        plan = planner.plan()
+        return [
+            [(m, make_batch(m)) for m in plan.worker_microbatches(w)]
+            for w in range(MESH_WORKERS)
+        ]
+
+    steps = [planned_ws() for _ in range(max(n_steps, 6))]
+
+    def one(mode, ws, i):
+        nonlocal state
+        t0 = _time.perf_counter()
+        state, o = ex.execute(
+            state, ws, step_key=jax.random.PRNGKey(3000 + i),
+            step=i, measure=mode,
+        )
+        if mode == "async":
+            recs, _rank_times = o["timers"].join()
+        else:
+            recs = o["records"]
+        jax.block_until_ready(state["step"])
+        return _time.perf_counter() - t0, recs
+
+    # paired measurement: each fan-out runs in BOTH modes back to back
+    # (order alternating), so machine-load noise hits the pair together and
+    # the per-pair ratio isolates the serial-vs-async difference; the
+    # median pair keeps one noisy step from deciding the gate
+    walls = {"serial": [], "async": []}
+    rec_counts = {"serial": [], "async": []}
+    rank_cover: set = set()
+    pair_ratios = []
+    for i, ws in enumerate(steps):
+        order = ("serial", "async") if i % 2 == 0 else ("async", "serial")
+        pair = {}
+        for mode in order:
+            wall, recs = one(mode, ws, i)
+            pair[mode] = wall
+            walls[mode].append(wall)
+            rec_counts[mode].append(len(recs))
+            if mode == "async":
+                rank_cover |= {r.worker for r in recs}
+        pair_ratios.append(pair["async"] / pair["serial"])
+    serial = {
+        "mean_step_wall": float(np.mean(walls["serial"])),
+        "records_per_step": float(np.mean(rec_counts["serial"])),
+    }
+    async_ = {
+        "mean_step_wall": float(np.mean(walls["async"])),
+        "records_per_step": float(np.mean(rec_counts["async"])),
+        "ranks_covered": sorted(rank_cover),
+    }
+    ratio = float(np.median(pair_ratios))
+
+    # async-mode gradient parity vs the single-device oracle (fresh states)
+    ws = steps[0]
+    key = jax.random.PRNGKey(77)
+    m_state, m_out = ex.execute(
+        ex.place_state(state0), ws, step_key=key, measure="async"
+    )
+    m_out["timers"].join()
+    o_state, _ = oracle_step(ex.cfg, ex.opt, state0, ws, step_key=key)
+    parity = rel_l2(
+        jax.device_get(m_state["params"]), jax.device_get(o_state["params"])
+    )
+
+    # background knapsack refinement: seed-vs-adopted makespan on the same
+    # planner's pools (pure host work; the window a training step hides)
+    from repro.core import StepPlanner as _SP
+
+    rp = _SP(
+        planner.buckets, None, n_workers=MESH_WORKERS,
+        budget=planner.budget, budget_of=planner.budget_of,
+        load_of=planner.load_of, strategy="knapsack", seed=SEED + 9,
+        overlap=True,
+    )
+    adopted = 0
+    ratios = []
+    for _ in range(32):
+        seed_plan, ticket = rp.plan_async()
+        best = ticket.wait(5.0)
+        if best is not seed_plan:
+            adopted += 1
+        ratios.append(best.makespan() / seed_plan.makespan())
+    rp.close()
+
+    out = {
+        "serial": serial,
+        "async": async_,
+        "step_time_ratio": float(ratio),
+        "grad_rel_l2_vs_oracle": float(parity),
+        "refine_adopted_frac": adopted / 32,
+        "refine_makespan_ratio": float(np.mean(ratios)),
+    }
+    print(f"[dispatch/overlap] measured step wall: serial "
+          f"{serial['mean_step_wall']*1e3:.1f}ms -> async "
+          f"{async_['mean_step_wall']*1e3:.1f}ms (median paired ratio "
+          f"{ratio:.3f}); records/step {async_['records_per_step']:.1f} "
+          f"across ranks {async_['ranks_covered']}")
+    print(f"[dispatch/overlap] async grad parity vs oracle: {parity:.2e}; "
+          f"refine adopted {adopted}/32, makespan ratio "
+          f"{out['refine_makespan_ratio']:.4f} vs LPT seed")
+    csv.append(
+        f"dispatch.overlap,0.0,ratio={ratio:.3f};parity={parity:.2e};"
+        f"refine={out['refine_makespan_ratio']:.4f}"
+    )
+    assert parity <= 1e-5, (
+        f"async-mode gradients drifted from the oracle: {parity:.2e}"
+    )
+    assert async_["ranks_covered"] == list(range(MESH_WORKERS)), (
+        "async measured mode must keep per-rank records populated"
+    )
+    # on shared-CPU virtual devices the ranks cannot truly parallelize
+    # (XLA's intra-op pool already saturates the cores), so the async win
+    # is dispatch pipelining only — a few percent.  The claim gated here
+    # is "async must not be SLOWER than serial"; 2% is timing-noise
+    # allowance for contended CI runners, not a real-regression budget
+    # (typical measured median: 0.97-0.99).
+    assert ratio <= 1.02, (
+        f"async measured step time must not exceed the serial baseline "
+        f"(median paired ratio {ratio:.3f}x, noise allowance 1.02)"
+    )
+    assert out["refine_makespan_ratio"] <= 1.0 + 1e-9, (
+        "an adopted refined plan can never exceed its LPT seed's makespan"
+    )
     return out
 
 
@@ -336,8 +495,9 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", action="store_true")
+    ap.add_argument("--overlap", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     a = ap.parse_args()
     rows: list[str] = []
-    run(rows, smoke=a.smoke, mesh=a.mesh)
+    run(rows, smoke=a.smoke, mesh=a.mesh, overlap=a.overlap)
     print("\n".join(rows))

@@ -29,3 +29,16 @@ def residual_bytes(f, *args) -> int:
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def out_path(filename: str):
+    """Canonical location for generated benchmark artifacts.
+
+    Everything a bench emits (JSON results, traces) lands in
+    ``benchmarks/out/`` — gitignored as a directory — instead of littering
+    the repo root with stray files."""
+    import pathlib
+
+    out = pathlib.Path(__file__).parent / "out"
+    out.mkdir(parents=True, exist_ok=True)
+    return out / filename

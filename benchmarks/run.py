@@ -66,8 +66,13 @@ def check_thresholds(results: dict) -> list[str]:
                         f"{here}: {val:.4g} below min {spec['min']:.4g}"
                     )
             elif isinstance(spec, dict):
-                walk(spec, result.get(key, {}) if isinstance(result, dict) else {},
-                     f"{here}/")
+                sub = result.get(key) if isinstance(result, dict) else None
+                if sub is None:
+                    # whole subtree absent (e.g. --mesh/--overlap not run):
+                    # skip it, mirroring how un-run top-level sections skip.
+                    # A *leaf* missing from a present subtree still fails.
+                    continue
+                walk(spec, sub, f"{here}/")
 
     for section, bound in bounds.items():
         if section in results:
@@ -82,6 +87,10 @@ def main() -> None:
                     help="shrunken sections for the CI gate")
     ap.add_argument("--mesh", action="store_true",
                     help="add real SPMD execution to the dispatch section")
+    ap.add_argument("--overlap", action="store_true",
+                    help="add the overlapped-execution comparison (async "
+                         "device-timed dispatch vs serial measured baseline; "
+                         "requires --mesh)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results as JSON (CI artifact)")
     args = ap.parse_args()
@@ -119,6 +128,8 @@ def main() -> None:
                 kwargs["smoke"] = args.smoke
             if "mesh" in params:
                 kwargs["mesh"] = args.mesh
+            if "overlap" in params:
+                kwargs["overlap"] = args.overlap
             results[name] = m.run(csv, **kwargs)
         except Exception:  # noqa: BLE001
             failures.append(name)
@@ -138,6 +149,7 @@ def main() -> None:
     if args.json:
         payload = {"results": results, "csv": csv,
                    "threshold_violations": violations}
+        pathlib.Path(args.json).parent.mkdir(parents=True, exist_ok=True)
         pathlib.Path(args.json).write_text(
             json.dumps(
                 payload, indent=2,

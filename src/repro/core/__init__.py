@@ -43,6 +43,8 @@ from .shape_bench import (
 )
 from .dispatch import (
     DISPATCH_STRATEGIES,
+    PlanRefiner,
+    RefineTicket,
     StepPlan,
     StepPlanner,
     assign_pool,
@@ -86,6 +88,8 @@ __all__ = [
     "run_measured_benchmark",
     "sweep_grid",
     "DISPATCH_STRATEGIES",
+    "PlanRefiner",
+    "RefineTicket",
     "StepPlan",
     "StepPlanner",
     "assign_pool",

@@ -19,6 +19,21 @@ Dispatch strategies (pluggable, compared by ``benchmarks/bench_dispatch.py``):
   between the heaviest and lightest ranks until no exchange shrinks the
   makespan (KnapFormer/OmniBal-style rebalancing pass).
 
+**Overlapped refinement** (KnapFormer's "balancing hidden behind compute"):
+the swap refinement is the only dispatch stage whose cost grows with pool
+size, and it does not need to run on the critical path.  With
+``overlap=True`` a planner's :meth:`StepPlanner.plan_async` returns the
+cheap LPT seed immediately and hands the knapsack-swap passes to a
+:class:`PlanRefiner` daemon thread; the consumer adopts the refined
+assignment at the next step boundary via :meth:`RefineTicket.best` — iff it
+strictly lowers the predicted max-rank load — and otherwise dispatches the
+seed.  Because refinement only *regroups* the pool (never changes its
+microbatches), already-materialized batches are reusable under either
+assignment.  Note the adoption is wall-clock dependent, so overlapped plans
+are for the single-controller path; multi-host deployments that all-gather
+plan digests need the deterministic synchronous ``knapsack`` strategy (or a
+fixed-round refinement both hosts run identically).
+
 The planner is shared state between the data pipeline (its prefetch thread
 calls :meth:`StepPlanner.plan` each step) and the closed-loop scheduler
 (which pushes replans via :meth:`StepPlanner.update`), so both entry points
@@ -200,6 +215,104 @@ def refine_swaps(
     return groups
 
 
+class RefineTicket:
+    """Handle to one plan's background knapsack-swap refinement.
+
+    ``best()`` never blocks: it returns the refined plan once the worker
+    has finished AND the refinement *strictly* lowers the predicted
+    max-rank load, and the LPT seed otherwise — so a consumer polling at a
+    step boundary always gets a dispatchable plan whose makespan is <= the
+    seed's (the adoption invariant the hypothesis suite pins down).
+    """
+
+    def __init__(self, seed: StepPlan):
+        self.seed = seed
+        self._done = threading.Event()
+        self._refined: StepPlan | None = None
+
+    def _finish(self, refined: StepPlan | None) -> None:
+        self._refined = refined
+        self._done.set()
+
+    def ready(self) -> bool:
+        return self._done.is_set()
+
+    def best(self, *, eps: float = 1e-12) -> StepPlan:
+        """The plan to dispatch *now*: refined iff done and strictly better."""
+        refined = self._refined if self._done.is_set() else None
+        if refined is not None and refined.makespan() < self.seed.makespan() - eps:
+            return refined
+        return self.seed
+
+    def wait(self, timeout: float | None = None) -> StepPlan:
+        """Block for the refinement (tests/benchmarks), then ``best()``."""
+        self._done.wait(timeout)
+        return self.best()
+
+
+class PlanRefiner:
+    """Daemon thread running knapsack-swap passes off the critical path.
+
+    ``refine(seed)`` enqueues one LPT-seeded plan and returns immediately;
+    the worker applies :func:`refine_swaps` and publishes the result on the
+    ticket.  If the queue backs up past ``max_pending`` (refinement slower
+    than the step cadence), the *oldest* unstarted tickets resolve to their
+    seeds — a late refinement of a stale plan is worthless, and dropping it
+    keeps the thread from falling ever further behind the training loop.
+    """
+
+    def __init__(self, *, max_pending: int = 4, max_rounds: int = 64):
+        self._max_pending = max_pending
+        self._max_rounds = max_rounds
+        self._cv = threading.Condition()
+        self._queue: list[RefineTicket] = []
+        self._closed = False
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def refine(self, seed: StepPlan) -> RefineTicket:
+        ticket = RefineTicket(seed)
+        with self._cv:
+            if self._closed:
+                ticket._finish(None)  # closed refiner: seed stands
+                return ticket
+            self._queue.append(ticket)
+            while len(self._queue) > self._max_pending:
+                self._queue.pop(0)._finish(None)
+            self._cv.notify()
+        return ticket
+
+    def _worker(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue:
+                    return
+                ticket = self._queue.pop(0)
+            groups = refine_swaps(
+                ticket.seed.loads,
+                ticket.seed.assignments,
+                max_rounds=self._max_rounds,
+            )
+            ticket._finish(
+                dataclasses.replace(
+                    ticket.seed,
+                    assignments=tuple(tuple(g) for g in groups),
+                    strategy="knapsack",
+                )
+            )
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            for t in self._queue:
+                t._finish(None)
+            self._queue.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout=2.0)
+
+
 def assign_pool(
     loads: Sequence[float],
     n_workers: int,
@@ -242,6 +355,7 @@ class StepPlanner:
         load_of: Callable[[Bucket], float] | None = None,
         strategy: str = "lpt",
         seed: int = 0,
+        overlap: bool = False,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -257,6 +371,11 @@ class StepPlanner:
         self.budget = float(budget)
         self.budget_of = budget_of
         self.load_of = load_of if load_of is not None else budget_of
+        # overlapped knapsack refinement: plan_async() returns the LPT seed
+        # and runs the swap passes on a PlanRefiner thread (spawned lazily
+        # so plain synchronous planners never start one)
+        self.overlap = overlap
+        self._refiner: PlanRefiner | None = None
         self._set_buckets(buckets, weights)
 
     def _set_buckets(
@@ -284,10 +403,13 @@ class StepPlanner:
         load_of: Callable[[Bucket], float] | None = None,
         n_workers: int | None = None,
         strategy: str | None = None,
+        overlap: bool | None = None,
     ) -> None:
         """Swap any part of the plan mid-training (scheduler replans,
         elastic resizes) without draining the pipeline."""
         with self._lock:
+            if overlap is not None:
+                self.overlap = overlap
             if strategy is not None:
                 if strategy not in DISPATCH_STRATEGIES:
                     raise ValueError(f"unknown dispatch strategy {strategy!r}")
@@ -351,6 +473,46 @@ class StepPlanner:
         """Draw + pack one optimizer step."""
         return self.plan_pool(self.draw_pool())
 
+    def plan_async(self) -> tuple[StepPlan, RefineTicket | None]:
+        """Draw + pack with knapsack refinement off the critical path.
+
+        With ``overlap`` and the ``knapsack`` strategy this returns the
+        cheap LPT seed immediately plus a :class:`RefineTicket`; the caller
+        dispatches ``ticket.best()`` at the step boundary (refined iff the
+        background swap passes strictly lowered the predicted max-rank
+        load).  Any other configuration degrades to the synchronous
+        :meth:`plan` and a ``None`` ticket, so consumers can call this
+        unconditionally.
+        """
+        pool = self.draw_pool()
+        with self._lock:
+            if not (self.overlap and self.strategy == "knapsack"):
+                overlapped = False
+            else:
+                overlapped = True
+                loads = [float(self.load_of(b)) for b in pool]
+                seed = StepPlan(
+                    microbatches=tuple(pool),
+                    assignments=tuple(
+                        tuple(g) for g in assign_lpt(loads, self.n_workers)
+                    ),
+                    loads=tuple(loads),
+                    strategy="lpt",
+                )
+                if self._refiner is None:
+                    self._refiner = PlanRefiner()
+                refiner = self._refiner
+        if not overlapped:
+            return self.plan_pool(pool), None
+        return seed, refiner.refine(seed)
+
+    def close(self) -> None:
+        """Stop the background refiner (no-op for synchronous planners)."""
+        with self._lock:
+            refiner, self._refiner = self._refiner, None
+        if refiner is not None:
+            refiner.close()
+
     def describe(self) -> str:
         with self._lock:
             return (
@@ -362,6 +524,8 @@ class StepPlanner:
 
 __all__ = [
     "DISPATCH_STRATEGIES",
+    "PlanRefiner",
+    "RefineTicket",
     "StepPlan",
     "StepPlanner",
     "assign_pool",

@@ -41,12 +41,22 @@ class SchedulerConfig:
     straggler_threshold: float = 1.25
     straggler_derate: float = 0.9  # M_comp multiplier while a straggler persists
     dispatch: str = "lpt"  # step-level microbatch dispatch strategy (§4.5)
+    # knapsack-swap refinement off the critical path: planners built by
+    # make_planner() return the LPT seed immediately and adopt the
+    # background-refined assignment at the next step boundary (only
+    # meaningful with dispatch="knapsack"; see core.dispatch.PlanRefiner)
+    overlap_refine: bool = False
 
     def __post_init__(self) -> None:
         if self.dispatch not in DISPATCH_STRATEGIES:
             raise ValueError(
                 f"unknown dispatch strategy {self.dispatch!r}; expected one "
                 f"of {DISPATCH_STRATEGIES}"
+            )
+        if self.overlap_refine and self.dispatch != "knapsack":
+            raise ValueError(
+                "overlap_refine only applies to dispatch='knapsack' (other "
+                "strategies have no refinement to overlap)"
             )
 
 
@@ -131,6 +141,7 @@ class AdaptiveLoadScheduler:
             budget_of=lambda b: b.load(p),
             strategy=self.config.dispatch,
             seed=seed,
+            overlap=self.config.overlap_refine,
         )
         return self.planner
 
@@ -179,6 +190,17 @@ class AdaptiveLoadScheduler:
         elif not stragglers and self._derate != 1.0:
             self._derate = 1.0
             self._replan(self._steps_seen, self.model, "straggler cleared")
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Release background resources: the attached planner's overlap
+        refiner thread (if any).  Loaders only close planners they own, so
+        the owner of a shared ``make_planner()`` planner — this scheduler —
+        must be closed by whoever tears the training job down.  Safe to
+        call repeatedly; a later ``plan_async()`` would lazily respawn."""
+        if self.planner is not None:
+            self.planner.close()
 
     # -- elasticity ---------------------------------------------------------
 

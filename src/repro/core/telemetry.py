@@ -33,6 +33,14 @@ class WorkerStepRecord:
     compute_time: float
     data_wait: float = 0.0
     comm_time: float = 0.0
+    # provenance of ``compute_time``: "host" = the host clock bracketed a
+    # blocking dispatch (serial measured mode — honest but it serializes
+    # ranks); "device" = consecutive device-completion timestamps observed
+    # by a per-rank tail-sentinel thread while every rank ran concurrently
+    # (async measured mode).  The scheduler treats both the same; the field
+    # exists so telemetry consumers can tell which execution regime
+    # produced a sample.
+    timing: str = "host"
 
     @property
     def total(self) -> float:

@@ -244,6 +244,15 @@ class ShardedBucketedLoader:
     pass the scheduler's own planner (``planner=sched.make_planner()``) and
     every scheduler replan reaches dispatch with no manual plumbing.
 
+    **Overlapped refinement.** With ``overlap=True`` (and the ``knapsack``
+    strategy) the producer dispatches each plan's cheap LPT seed and lets
+    a background ``PlanRefiner`` run the swap passes during the
+    materialize + backpressure window (i.e. behind the previous steps'
+    compute); at the push boundary the refined assignment is adopted iff
+    it strictly lowers the predicted max-rank load.  Refinement only
+    regroups the pool, so materialized batches are reused either way;
+    ``refined_adopted`` counts adoptions.
+
     **Elastic resize.** ``resize(n)`` rebuilds the queue fan-out in place
     on rank join/leave: every already-queued microbatch is redistributed
     across the new rank count exactly once (per original plan boundary, so
@@ -269,17 +278,20 @@ class ShardedBucketedLoader:
         seed: int = 0,
         prefetch: int = 2,
         planner: StepPlanner | None = None,
+        overlap: bool = False,
     ):
         self.n_workers = n_workers
+        self._owns_planner = planner is None
         if planner is not None:
             # the planner already defines the plan; conflicting args would
             # silently lose, so refuse them outright
             if (weights is not None or budget is not None
                     or budget_of is not None or load_of is not None
-                    or strategy is not None):
+                    or strategy is not None or overlap):
                 raise ValueError(
                     "pass either planner= or the plan-defining args "
-                    "(weights/budget/budget_of/load_of/strategy), not both"
+                    "(weights/budget/budget_of/load_of/strategy/overlap), "
+                    "not both"
                 )
             if list(buckets) != planner.buckets:
                 raise ValueError(
@@ -306,6 +318,7 @@ class ShardedBucketedLoader:
                 load_of=load_of,
                 strategy=strategy if strategy is not None else "lpt",
                 seed=seed,
+                overlap=overlap,
             )
         self._make_batch = make_batch
         self._rng = np.random.default_rng(seed + 1)
@@ -335,6 +348,9 @@ class ShardedBucketedLoader:
         # partially redistributed set of queues.
         self._lifecycle = threading.Lock()
         self._plans: Deque[StepPlan] = deque(maxlen=256)
+        # plans whose background knapsack refinement was adopted at the
+        # push boundary (overlap telemetry; guarded by _cv)
+        self._refined_adopted = 0
         self._stop = threading.Event()
         self._error: Exception | None = None
         self._thread = threading.Thread(target=self._worker, daemon=True)
@@ -349,6 +365,12 @@ class ShardedBucketedLoader:
         """Dispatch decisions emitted so far (telemetry/debugging)."""
         return list(self._plans)
 
+    @property
+    def refined_adopted(self) -> int:
+        """How many emitted plans adopted a background-refined assignment."""
+        with self._cv:
+            return self._refined_adopted
+
     # -- plan updates from the closed-loop scheduler -------------------------
 
     def plan_update(
@@ -361,8 +383,17 @@ class ShardedBucketedLoader:
 
     # -- producer -------------------------------------------------------------
 
-    def _materialize(self, plan: StepPlan) -> list[WorkerStep]:
-        batches = [self._make_batch(self._rng, b) for b in plan.microbatches]
+    def _materialize(self, plan: StepPlan) -> list[dict]:
+        """Build every microbatch in the plan's pool once (pool order).
+
+        Materialization is keyed by pool index, not by assignment, so an
+        overlapped knapsack refinement — which only regroups the pool —
+        can be adopted after the fact without rebuilding a single batch.
+        """
+        return [self._make_batch(self._rng, b) for b in plan.microbatches]
+
+    @staticmethod
+    def _fan_out(plan: StepPlan, batches: Sequence[dict]) -> list[WorkerStep]:
         return [
             [(plan.microbatches[i], batches[i]) for i in plan.assignments[w]]
             for w in range(plan.n_workers)
@@ -450,8 +481,8 @@ class ShardedBucketedLoader:
     def _worker(self) -> None:
         try:
             while not self._stop.is_set():
-                plan = self._planner.plan()
-                per_rank = self._materialize(plan)
+                plan, ticket = self._planner.plan_async()
+                batches = self._materialize(plan)
                 with self._cv:
                     # backpressure on the DEEPEST rank queue: like the old
                     # per-rank bounded queues, one stalled consumer caps the
@@ -463,6 +494,16 @@ class ShardedBucketedLoader:
                         self._cv.wait(0.1)
                     if self._stop.is_set():
                         return
+                    if ticket is not None:
+                        # the push boundary: the refiner had the whole
+                        # materialize + backpressure window (i.e. the
+                        # previous steps' compute) — adopt its assignment
+                        # iff it strictly lowered the predicted makespan
+                        refined = ticket.best()
+                        if refined is not plan:
+                            self._refined_adopted += 1
+                            plan = refined
+                    per_rank = self._fan_out(plan, batches)
                     # elastic: the planner may have been resized (shared
                     # planner, or loader.resize between draw and push) —
                     # adopt its worker count and re-deal the stale plan
@@ -573,3 +614,5 @@ class ShardedBucketedLoader:
                     d.clear()
                 self._cv.notify_all()
         self._thread.join(timeout=2.0)
+        if self._owns_planner:
+            self._planner.close()  # stop the overlap refiner thread, if any

@@ -19,6 +19,14 @@ plan onto a real ``jax`` mesh:
   32-byte plan digest is all-gathered across the mesh and any divergence
   raises :class:`PlanAgreementError` *before* a mismatched collective can
   deadlock or silently skew gradients.
+* **async measured mode** — ``measure="async"`` keeps every rank's
+  dispatch non-blocking and observes completion through per-rank
+  :class:`RankTimers` (device-completion deltas, tail-sentinel join), so
+  honest per-microbatch telemetry no longer serializes the ranks it
+  measures; ``measure="serial"`` (the old host-clock mode) is kept as the
+  benchmark baseline.  :meth:`PlanExecutor.stage` pre-places a future
+  step's batches on their rank devices (H2D double-buffering behind the
+  current step's compute).
 
 Gradient semantics match the single-device oracle (:func:`oracle_step`):
 each microbatch contributes the gradient of its own mean-token loss, and
@@ -32,6 +40,7 @@ tests and ``bench_dispatch --mesh`` exercise this path.
 
 from __future__ import annotations
 
+import threading
 import time
 from typing import Any, Callable, Sequence
 
@@ -46,13 +55,79 @@ from repro.core.dispatch import microbatch_key
 from repro.core.telemetry import WorkerStepRecord
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig, adamw_update
-from repro.train.steps import make_loss_fn
+from repro.train.steps import make_pool_grad_step
 
 WorkerSteps = Sequence[Sequence[tuple[Any, dict]]]  # [rank][(bucket, batch)]
 
 
 class PlanAgreementError(RuntimeError):
     """Hosts derived different StepPlans for the same optimizer step."""
+
+
+class RankTimers:
+    """Per-rank device-completion observers for async measured execution.
+
+    Serial measured mode blocks the host per microbatch, which serializes
+    ranks and makes the telemetry destroy the parallelism it measures.
+    Here every rank's microbatches are dispatched without host blocking;
+    one daemon thread per rank then walks that rank's losses in order,
+    blocking on each as a device-completion sentinel.  Within a rank,
+    execution is in-order on one device, so each readiness timestamp is
+    that microbatch's completion and consecutive deltas are honest
+    per-microbatch compute times — while the *other* ranks keep running
+    concurrently.  ``join()`` is the per-rank tail-sentinel block: step
+    wall-clock becomes max-over-ranks instead of the serial sum.  Compile
+    executions are excluded from telemetry exactly as in serial mode.
+    """
+
+    def __init__(
+        self,
+        step: int,
+        rank_jobs: Sequence[tuple[int, float, list[tuple[Any, Any, bool]]]],
+        time_scale: Callable[[int], float] | None = None,
+    ):
+        self._step = step
+        self._time_scale = time_scale
+        self._records: dict[int, list[WorkerStepRecord]] = {}
+        self._rank_times: dict[int, float] = {}
+        self._threads: list[threading.Thread] = []
+        for rank, t0, jobs in rank_jobs:
+            t = threading.Thread(
+                target=self._observe, args=(rank, t0, jobs), daemon=True
+            )
+            self._threads.append(t)
+            t.start()
+
+    def _observe(self, rank: int, t0: float, jobs) -> None:
+        scale = self._time_scale(rank) if self._time_scale else 1.0
+        recs: list[WorkerStepRecord] = []
+        prev = t0
+        for bucket, loss, fresh in jobs:
+            loss.block_until_ready()
+            now = time.perf_counter()
+            dt = now - prev
+            prev = now
+            if not fresh:  # compile executions poison telemetry
+                recs.append(
+                    WorkerStepRecord(
+                        step=self._step,
+                        worker=rank,
+                        batch_size=bucket.batch_size,
+                        seq_len=bucket.seq_len,
+                        compute_time=dt * scale,
+                        timing="device",
+                    )
+                )
+        self._records[rank] = recs
+        self._rank_times[rank] = (prev - t0) * scale
+
+    def join(self) -> tuple[list[WorkerStepRecord], list[float]]:
+        """Block on every rank's tail sentinel; returns (records, rank_times)."""
+        for t in self._threads:
+            t.join()
+        ranks = sorted(self._rank_times)
+        records = [r for rank in ranks for r in self._records[rank]]
+        return records, [self._rank_times[r] for r in ranks]
 
 
 def data_axis_devices(mesh: Mesh, axis: str = "data") -> list:
@@ -117,17 +192,12 @@ class PlanExecutor:
         self._donate = donate
         self._replicated = NamedSharding(mesh, P())
         self._stacked = NamedSharding(mesh, P("data"))
-        loss_fn = make_loss_fn(cfg, policy)
-
-        def grad_step(params, batch, key, idx):
-            rng = jax.random.fold_in(key, idx)
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
-            return loss, grads
-
-        # ONE jitted callable; jax retraces per batch-shape signature and
-        # per execution device, so each (shape, rank) pair compiles exactly
-        # once and the steady state pays zero retrace.
-        self._grad_step = jax.jit(grad_step)
+        # ONE jitted callable (the shared pool grad step, so RNG/enumeration
+        # semantics can never drift from the oracle); jax retraces per
+        # batch-shape signature and per execution device, so each
+        # (shape, rank) pair compiles exactly once and the steady state
+        # pays zero retrace.
+        self._grad_step = jax.jit(make_pool_grad_step(cfg, policy))
         self._acc_add = jax.jit(
             lambda a, b: jax.tree.map(jnp.add, a, b), donate_argnums=(0,)
         )
@@ -154,6 +224,12 @@ class PlanExecutor:
         )
         self._update = None  # built lazily (needs the state tree structure)
         self._seen_signatures: set = set()
+        # H2D double-buffer: stage() pre-places a FUTURE step's batches on
+        # their rank devices while the current step computes; execute()
+        # picks the placed copies up by host-object identity.  Entry:
+        # (device, pinned host batch, placed device batch) — the pinned
+        # object keeps the id() key from ever being reused by a new dict
+        self._staged: dict[int, tuple[Any, Any, Any]] = {}
 
     # -- placement ---------------------------------------------------------
 
@@ -282,6 +358,31 @@ class PlanExecutor:
             times.append(time.perf_counter() - t0)
         return times
 
+    # -- H2D staging -------------------------------------------------------
+
+    def stage(self, worker_steps: WorkerSteps) -> None:
+        """Pre-place a future step's batches on their rank devices.
+
+        Transfers are enqueued asynchronously, so they overlap whatever the
+        devices are currently computing (the double-buffered H2D leg of the
+        overlapped execution engine).  Entries are keyed by the host batch
+        object's identity AND pin the object itself (so a freed dict's id
+        can never be reused into a stale hit); a fan-out that changed
+        between stage and execute (elastic resize) simply misses the cache
+        and pays a fresh ``device_put`` — staging is an optimization,
+        never a correctness dependency."""
+        self._staged.clear()
+        for rank, share in enumerate(worker_steps[: self.n_ranks]):
+            dev = self.devices[rank]
+            for _bucket, batch in share:
+                self._staged[id(batch)] = (dev, batch, jax.device_put(batch, dev))
+
+    def _take_staged(self, batch, dev):
+        entry = self._staged.pop(id(batch), None)
+        if entry is not None and entry[0] == dev and entry[1] is batch:
+            return entry[2]
+        return jax.device_put(batch, dev)
+
     @staticmethod
     def _signature(dev, batch) -> tuple:
         return (
@@ -350,7 +451,7 @@ class PlanExecutor:
         step_key,
         step: int = 0,
         digests: Sequence[bytes] | None = None,
-        measure: bool = False,
+        measure: bool | str = False,
         time_scale: Callable[[int], float] | None = None,
     ):
         """Run one planned optimizer step on the mesh.
@@ -361,16 +462,35 @@ class PlanExecutor:
         the pool rank-major — identical to :func:`oracle_step`, so the
         reduced gradient is bit-comparable to the single-device oracle.
 
-        ``measure=True`` blocks per microbatch and returns per-rank wall
-        times + per-microbatch ``WorkerStepRecord`` telemetry (compile
-        executions are excluded); the default dispatches every rank
-        asynchronously and blocks once at the update.
+        Measuring modes:
 
-        A fan-out SMALLER than the mesh (elastic shrink mid-run) is legal:
-        surplus devices idle for the step, contributing zero grad sums and
-        zero counts so the reduced mean is unchanged.  Growing past the
-        mesh's device count raises — that needs a new mesh/executor.
+        * ``measure=False`` — dispatch every rank asynchronously, block
+          once at the update; no telemetry.
+        * ``measure="async"`` (alias ``True``, matching ``MeshEngine``) —
+          dispatch exactly like ``measure=False``, then observe completion
+          through per-rank :class:`RankTimers` (device-completion deltas,
+          tail-sentinel join).  Telemetry and parallelism coexist:
+          ``out["timers"].join()`` yields the same ``WorkerStepRecord``
+          stream with ``timing="device"``.
+        * ``measure="serial"`` — block per microbatch for host-clock
+          telemetry.  Honest per-(B, S) samples, but ranks run one after
+          another: wall-clock degenerates to the cross-rank SUM.  Kept as
+          the benchmark baseline; opt in explicitly.
+
+        ``out["compiled"]`` reports whether any microbatch paid a fresh
+        compile this step (the trainer excludes such steps from
+        throughput).  A fan-out SMALLER than the mesh (elastic shrink
+        mid-run) is legal: surplus devices idle for the step, contributing
+        zero grad sums and zero counts so the reduced mean is unchanged.
+        Growing past the mesh's device count raises — that needs a new
+        mesh/executor.
         """
+        if measure is True:
+            measure = "async"
+        if measure not in (False, "serial", "async"):
+            raise ValueError(
+                f"measure must be False, 'serial', or 'async'; got {measure!r}"
+            )
         if len(worker_steps) > self.n_ranks:
             raise ValueError(
                 f"plan fans out to {len(worker_steps)} ranks but the mesh "
@@ -381,9 +501,12 @@ class PlanExecutor:
             self.verify_agreement(digests)
 
         pool_index = 0
+        compiled = False
         per_rank_grads, per_rank_stats = [], []
         rank_times: list[float] = []
         records: list[WorkerStepRecord] = []
+        # async measure: (rank, t_dispatch0, [(bucket, loss, fresh), ...])
+        rank_jobs: list[tuple[int, float, list]] = []
         param_views = self._rank_views(state["params"])
         for rank in range(self.n_ranks):
             # elastic shrink: a plan may fan out to fewer ranks than the
@@ -403,22 +526,27 @@ class PlanExecutor:
                 per_rank_stats.append(
                     jax.device_put(np.zeros((1, 2), np.float32), dev)
                 )
-                if measure:
+                if measure == "serial":
                     rank_times.append(0.0)
+                elif measure == "async":
+                    rank_jobs.append((rank, time.perf_counter(), []))
                 continue
             key_r = jax.device_put(step_key, dev)
             acc = None
             loss_sum = None
             t_rank = 0.0
+            jobs: list = []
+            t_rank0 = time.perf_counter()
             for bucket, batch in share:
-                batch_r = jax.device_put(batch, dev)
+                batch_r = self._take_staged(batch, dev)
                 idx_r = jax.device_put(np.int32(pool_index), dev)
                 sig = self._signature(dev, batch_r)
                 fresh = sig not in self._seen_signatures
                 self._seen_signatures.add(sig)
+                compiled = compiled or fresh
                 t0 = time.perf_counter()
                 loss, grads = self._grad_step(params_r, batch_r, key_r, idx_r)
-                if measure:
+                if measure == "serial":
                     loss.block_until_ready()
                     dt = time.perf_counter() - t0
                     if not fresh:  # compile executions poison telemetry
@@ -433,6 +561,8 @@ class PlanExecutor:
                                 compute_time=dt * scale,
                             )
                         )
+                elif measure == "async":
+                    jobs.append((bucket, loss, fresh))
                 acc = grads if acc is None else self._acc_add(acc, grads)
                 loss_sum = loss if loss_sum is None else loss_sum + loss
                 pool_index += 1
@@ -441,17 +571,27 @@ class PlanExecutor:
                 [loss_sum.astype(jnp.float32), jnp.float32(len(share))]
             )
             per_rank_stats.append(self._lift(stats))
-            if measure:
+            if measure == "serial":
                 rank_times.append(t_rank)
+            elif measure == "async":
+                rank_jobs.append((rank, t_rank0, jobs))
 
+        self._staged.clear()  # anything unclaimed this step is stale
+        timers = (
+            RankTimers(step, rank_jobs, time_scale)
+            if measure == "async"
+            else None
+        )
         stacked_grads = self._stack(per_rank_grads)
         stacked_stats = self._stack(per_rank_stats)
         if self._update is None:
             self._update = self._build_update(state)
         new_state, metrics = self._update(state, stacked_grads, stacked_stats)
-        out = {"loss": metrics["loss"], "records": records}
-        if measure:
+        out = {"loss": metrics["loss"], "records": records, "compiled": compiled}
+        if measure == "serial":
             out["rank_times"] = rank_times
+        elif measure == "async":
+            out["timers"] = timers
         return new_state, out
 
 
@@ -461,15 +601,13 @@ def oracle_step(cfg: ModelConfig, opt: OptimizerConfig, state, worker_steps,
     trainer computes for the same global pool (rank-major enumeration,
     identical per-microbatch RNG derivation).  The mesh path must match
     this to ~float32 resolution — the parity gate in the tier-1 tests."""
-    loss_fn = make_loss_fn(cfg, policy)
-    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    grad_fn = jax.jit(make_pool_grad_step(cfg, policy))
     acc = None
     loss_sum = 0.0
     n = 0
     for share in worker_steps:
         for _bucket, batch in share:
-            rng = jax.random.fold_in(step_key, n)
-            loss, grads = grad_fn(state["params"], batch, rng)
+            loss, grads = grad_fn(state["params"], batch, step_key, np.int32(n))
             acc = (
                 grads
                 if acc is None

@@ -36,43 +36,40 @@ def _pallas_supported(x, scale, shift) -> bool:
         and scale.ndim == 2
         and x.shape[-1] % 128 == 0
         and x.shape[0] == scale.shape[0]
-        and _seq_block(x.shape[1]) >= 8
+        and _divisor_block(x.shape[1], DEFAULT_SEQ_BLOCK) >= 8
     )
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _adaln_pallas(x, scale, shift, eps, interpret):
     y, _, _ = adaln_fwd_pallas(
-        x, scale, shift, eps=eps, seq_block=_seq_block(x.shape[1]), interpret=interpret
+        x, scale, shift, eps=eps,
+        seq_block=_divisor_block(x.shape[1], DEFAULT_SEQ_BLOCK),
+        interpret=interpret,
     )
     return y
 
 
-def _seq_block(s: int) -> int:
-    return _divisor_block(s, DEFAULT_SEQ_BLOCK)
-
-
 def _fwd(x, scale, shift, eps, interpret):
     y, mu, rstd = adaln_fwd_pallas(
-        x, scale, shift, eps=eps, seq_block=_seq_block(x.shape[1]), interpret=interpret
+        x, scale, shift, eps=eps,
+        seq_block=_divisor_block(x.shape[1], DEFAULT_SEQ_BLOCK),
+        interpret=interpret,
     )
     return y, (x, scale, mu, rstd)
-
-
-def _block_of(n: int, target: int) -> int:
-    return _divisor_block(n, target)
 
 
 def _bwd(eps, interpret, res, dy):
     x, scale, mu, rstd = res
     s, d = x.shape[1], x.shape[2]
     dx = adaln_bwd_dx_pallas(
-        dy, x, mu, rstd, scale, seq_block=_seq_block(s), interpret=interpret
+        dy, x, mu, rstd, scale,
+        seq_block=_divisor_block(s, DEFAULT_SEQ_BLOCK), interpret=interpret,
     )
     dscale, dshift = adaln_bwd_dmod_pallas(
         dy, x, mu, rstd,
-        d_block=_block_of(d, DEFAULT_D_BLOCK),
-        seq_block=_block_of(s, DEFAULT_DMOD_SEQ_BLOCK),
+        d_block=_divisor_block(d, DEFAULT_D_BLOCK),
+        seq_block=_divisor_block(s, DEFAULT_DMOD_SEQ_BLOCK),
         interpret=interpret,
     )
     return dx, dscale.astype(scale.dtype), dshift.astype(scale.dtype)

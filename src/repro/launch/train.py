@@ -51,6 +51,10 @@ def main() -> None:
                          "device per rank; on CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N) instead "
                          "of emulating ranks serially")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped execution: knapsack-swap plan "
+                         "refinement runs behind the previous step's "
+                         "compute (requires --dispatch knapsack)")
     args = ap.parse_args()
     if args.workers > 1 and not args.adaptive:
         ap.error("--workers > 1 requires --adaptive (the fixed-shape stream "
@@ -58,6 +62,11 @@ def main() -> None:
     if args.mesh and not args.adaptive:
         ap.error("--mesh requires --adaptive (mesh execution consumes the "
                  "planner's per-rank streams)")
+    if args.overlap and args.dispatch != "knapsack":
+        ap.error("--overlap refines knapsack plans; pass --dispatch knapsack")
+    if args.overlap and not (args.mesh or args.workers > 1):
+        ap.error("--overlap requires the planner-driven stream "
+                 "(--workers > 1 or --mesh)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -108,6 +117,7 @@ def main() -> None:
                 budget_of=lambda b: float(b.tokens),
                 load_of=lambda b: b.load(policy.p),
                 strategy=args.dispatch,
+                overlap=args.overlap,
             )
         else:
             loader = BucketedLoader(

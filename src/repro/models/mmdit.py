@@ -79,12 +79,17 @@ def init_params(key, cfg: ModelConfig) -> Params:
     return params
 
 
-def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None, segment_ids=None):
+def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None,
+           segment_ids=None, text_segment_ids=None):
     """mod: [B, 6, d] modulation signals (shared t-emb + per-block bias).
 
     ``segment_ids`` ([B, S] int32, -1 = padding) scope self-attention to
-    packed-window segments; cross-attention to the shared text stream stays
-    unsegmented.
+    packed-window segments.  ``text_segment_ids`` ([B, S_txt] int32, -1 =
+    padding) additionally scope cross-attention: a multi-clip packed video
+    window carries one prompt per clip, and each clip's visual tokens must
+    attend only to *their own* prompt's text states — ids match the visual
+    ``segment_ids`` (clip j -> id j on both sides).  Without them the text
+    stream is shared and cross-attention stays unsegmented.
     """
     b, s, d = x.shape
     h, dh = cfg.n_heads, cfg.head_dim
@@ -114,14 +119,18 @@ def _block(bp: Params, x, txt, mod, cfg: ModelConfig, policy=None, segment_ids=N
     )
     x = x + gate1[:, None, :].astype(x.dtype) * (ctx.reshape(b, s, h * dh) @ bp["wo"])
 
-    # --- cross attention to text
+    # --- cross attention to text (segment-scoped for packed windows)
     hn = apply_norm(bp["norm3"], x, "layernorm", cfg.norm_eps)
     qx = (hn @ bp["xq"]).reshape(b, s, h, dh)
     n = txt.shape[1]
     kvx = txt @ bp["xkv"]
     kx = kvx[..., : h * dh].reshape(b, n, h, dh)
     vx = kvx[..., h * dh :].reshape(b, n, h, dh)
-    ctx2 = K.attention(qx, kx, vx, causal=False)
+    ctx2 = K.attention(
+        qx, kx, vx, causal=False,
+        q_segment_ids=segment_ids if text_segment_ids is not None else None,
+        kv_segment_ids=text_segment_ids,
+    )
     x = x + ctx2.reshape(b, s, h * dh) @ bp["xo"]
 
     # --- MLP with fused AdaLN-modulate
@@ -141,7 +150,13 @@ def forward(
     remat: bool = True,
     unroll: bool = False,
     segment_ids=None,  # [B, S_vis] int32: packed-window doc ids (-1 = pad)
+    text_segment_ids=None,  # [B, S_txt] int32: per-clip prompt ids (-1 = pad)
 ):
+    if text_segment_ids is not None and segment_ids is None:
+        raise ValueError(
+            "text_segment_ids scope cross-attention per packed clip, which "
+            "needs the visual segment_ids to match against; pass both"
+        )
     x = latents @ params["x_in"]
     txt = text.astype(x.dtype) @ params["txt_in"]
     temb = timestep_embedding(t, 256).astype(x.dtype)
@@ -150,7 +165,8 @@ def forward(
 
     def superblock(x, bp):
         return _block(
-            bp, x, txt, mod, cfg, policy=policy, segment_ids=segment_ids
+            bp, x, txt, mod, cfg, policy=policy, segment_ids=segment_ids,
+            text_segment_ids=text_segment_ids,
         ), None
 
     body = jax.checkpoint(superblock) if remat else superblock
@@ -171,6 +187,7 @@ def rectified_flow_loss(
     policy=None,
     unroll: bool = False,
     segment_ids=None,
+    text_segment_ids=None,
 ):
     b = x0.shape[0]
     k1, k2 = jax.random.split(rng)
@@ -181,5 +198,6 @@ def rectified_flow_loss(
     v_pred = forward(
         params, cfg, xt, text, t,
         policy=policy, unroll=unroll, segment_ids=segment_ids,
+        text_segment_ids=text_segment_ids,
     )
     return jnp.mean((v_pred.astype(jnp.float32) - v_target) ** 2)

@@ -1,26 +1,35 @@
 """Training loop: bucketed steps + closed-loop scheduling + fault tolerance.
 
-The loop is bucket-shape-aware: jitted step functions are cached per
-(batch, seq) signature, so a shape mix costs one compile per bucket and the
-steady state pays zero retrace.  Per-step telemetry feeds the AdaptiveLoad
-scheduler, which may replan buckets; plan updates propagate to the loader
-without draining it.
+The loop is backend-agnostic: ``Trainer.run`` drives ONE
+:class:`~repro.train.engine.ExecutionEngine` and never branches on
+executor internals.  Two engines ship:
+
+* :class:`~repro.train.engine.EmulatedEngine` (default) — this host plays
+  every DP rank serially with oracle gradient semantics (pool-mean
+  gradient, one update per step); telemetry is recorded **per worker and
+  per microbatch**, so the cost-model refit sees honest ``(B, S, t)``
+  pairs and ``straggler_workers()`` sees every rank.
+* :class:`~repro.train.engine.MeshEngine` (``mesh=``) — real SPMD via
+  ``distributed.plan_exec.PlanExecutor``: rank ``r``'s microbatches run on
+  mesh device ``r``, grads meet in one ``psum``, one update per step.
+  With a scheduler attached the engine measures in **async** mode:
+  per-rank device-completion timing instead of host-blocking per
+  microbatch, so telemetry no longer serializes the ranks it measures.
+
+The driver overlaps the data path with compute when the engine dispatches
+asynchronously: while step ``i`` runs on the devices, step ``i+1`` is
+pulled from the loader and its batches staged H2D
+(``engine.prepare``) — the double-buffer that keeps devices from waiting
+on the host.
 
 The loop consumes either a single-rank stream (``BucketedLoader``: each
 item is one ``list[(bucket, batch)]``) or a planner-driven multi-rank
 stream (``ShardedBucketedLoader``: each item is per-worker lists from one
-global dispatch decision).  Two execution modes for the multi-rank case:
-
-* **emulated** (default) — this host plays every DP rank serially with an
-  optimizer update per microbatch; telemetry is recorded **per worker and
-  per microbatch** — each microbatch is timed individually (``float(loss)``
-  blocks on the device), so the cost-model refit sees honest ``(B, S, t)``
-  pairs and ``straggler_workers()`` sees every rank, not just worker 0.
-* **mesh** (``mesh=``) — real SPMD: rank ``r``'s microbatches run on mesh
-  device ``r`` via ``distributed.plan_exec.PlanExecutor``, grads accumulate
-  locally per rank and meet in one ``psum``, one optimizer update per step
-  (proper data parallelism).  With a scheduler attached the executor runs
-  in measuring mode so the same per-microbatch telemetry feeds the loop.
+global dispatch decision).  Jit compiles are shape-cached inside the
+engines; a first-compile step is recorded as a ``compile@i`` event and
+excluded from ``TrainHistory.throughput`` (mirroring the telemetry
+exclusion), so a shape mix costs one compile per bucket and never skews
+reported throughput.
 """
 
 from __future__ import annotations
@@ -32,12 +41,10 @@ from typing import Any, Callable, Mapping
 import jax
 
 from repro.core.scheduler import AdaptiveLoadScheduler
-from repro.core.telemetry import WorkerStepRecord
 from repro.distributed.fault_tolerance import FaultTolerantRunner
-from repro.distributed.plan_exec import PlanExecutor, worker_steps_digest
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig
-from repro.train.steps import make_train_step
+from repro.train.engine import EmulatedEngine, ExecutionEngine, MeshEngine
 
 
 @dataclasses.dataclass
@@ -46,11 +53,20 @@ class TrainHistory:
     step_times: list[float] = dataclasses.field(default_factory=list)
     tokens: list[int] = dataclasses.field(default_factory=list)
     events: list[str] = dataclasses.field(default_factory=list)
+    # steps that paid a jit compile: kept in step_times (the wall-clock
+    # record stays complete) but excluded from throughput — a handful of
+    # compile-polluted samples would understate steady-state tok/s exactly
+    # the way they used to poison the telemetry refit
+    compile_steps: list[int] = dataclasses.field(default_factory=list)
 
     @property
     def throughput(self) -> float:
-        t = sum(self.step_times)
-        return sum(self.tokens) / t if t > 0 else 0.0
+        skip = set(self.compile_steps)
+        if len(skip) >= len(self.step_times):  # nothing but compile steps
+            skip = set()
+        t = sum(dt for i, dt in enumerate(self.step_times) if i not in skip)
+        tok = sum(tk for i, tk in enumerate(self.tokens) if i not in skip)
+        return tok / t if t > 0 else 0.0
 
 
 class Trainer:
@@ -65,53 +81,37 @@ class Trainer:
         donate: bool = True,
         worker_time_scale: Mapping[int, float] | None = None,
         mesh=None,
-        measure_ranks: bool | None = None,
+        measure_ranks: bool | str | None = None,
         check_agreement: bool = False,
+        engine: ExecutionEngine | None = None,
     ):
         self.cfg = cfg
         self.opt = opt
         self.policy = policy
         self.scheduler = scheduler
         self.ft = ft
-        self._step_fn = make_train_step(cfg, opt, policy)
-        self._jitted: dict[tuple, Callable] = {}
-        self._donate = donate
-        # Emulation knob: when one host plays every DP rank, scale rank w's
-        # *recorded* compute time to model degraded hardware — lets tests and
-        # examples exercise the scheduler's straggler path end to end.
-        self._worker_time_scale = dict(worker_time_scale or {})
-        # SPMD mode: lower each step's plan onto the mesh instead of
-        # emulating ranks serially.  measure_ranks=True blocks per
-        # microbatch for honest per-rank timing (needed for telemetry;
-        # default: only when a scheduler consumes it).
-        self._executor = (
-            PlanExecutor(mesh, cfg, opt, policy=policy, donate=donate)
-            if mesh is not None
-            else None
-        )
-        self._measure_ranks = (
-            measure_ranks
-            if measure_ranks is not None
-            else scheduler is not None
-        )
-        # Per-step digest all-gather: off by default — a single-process
-        # Trainer derives every rank's digest from the same local fan-out,
-        # so the collective can only ever agree (pure overhead).  Turn on
-        # in multi-host deployments where each host passes its own digest.
-        self._check_agreement = check_agreement
-
-    def _jit_for(self, batch) -> tuple[Callable, bool]:
-        """Returns the jitted step fn and whether this signature is fresh
-        (first call pays the compile, so its timing must not enter
-        telemetry — a compile-poisoned sample skews the cost-model refit
-        and can flag whichever worker compiles first as a straggler)."""
-        sig = tuple(sorted((k, v.shape, str(v.dtype)) for k, v in batch.items()))
-        fresh = sig not in self._jitted
-        if fresh:
-            self._jitted[sig] = jax.jit(
-                self._step_fn, donate_argnums=(0,) if self._donate else ()
+        if engine is not None:
+            if mesh is not None:
+                raise ValueError("pass engine= or mesh=, not both")
+            self.engine = engine
+        elif mesh is not None:
+            # measure_ranks: False | "serial" | "async" (True = "async");
+            # default: measure only when a scheduler consumes the records
+            measure = (
+                measure_ranks
+                if measure_ranks is not None
+                else (scheduler is not None)
             )
-        return self._jitted[sig], fresh
+            self.engine = MeshEngine(
+                mesh, cfg, opt, policy=policy, donate=donate,
+                measure=measure, check_agreement=check_agreement,
+                worker_time_scale=worker_time_scale,
+            )
+        else:
+            self.engine = EmulatedEngine(
+                cfg, opt, policy=policy, donate=donate,
+                worker_time_scale=worker_time_scale,
+            )
 
     @staticmethod
     def _as_worker_steps(step) -> list[list[tuple[Any, Any]]]:
@@ -123,48 +123,6 @@ class Trainer:
         if step and isinstance(step[0], list):
             return step
         return [step]
-
-    def _emulated_step(self, state, worker_steps, rng, i):
-        """Serial single-host emulation: every rank's microbatches run on
-        the default device, one optimizer update per microbatch."""
-        loss_acc, n_micro = 0.0, 0
-        recs: list[WorkerStepRecord] = []
-        for w, step_batches in enumerate(worker_steps):
-            scale = self._worker_time_scale.get(w, 1.0)
-            for bucket, batch in step_batches:  # accumulation microbatches
-                rng, sub = jax.random.split(rng)
-                fn, fresh = self._jit_for(batch)
-                tb = time.perf_counter()
-                state, metrics = fn(state, batch, sub)
-                loss_acc += float(metrics["loss"])  # blocks on device
-                mb_dt = time.perf_counter() - tb
-                if not fresh:  # compile steps don't enter telemetry
-                    recs.append(
-                        WorkerStepRecord(
-                            step=i, worker=w,
-                            batch_size=bucket.batch_size, seq_len=bucket.seq_len,
-                            compute_time=mb_dt * scale,
-                        )
-                    )
-                n_micro += 1
-        return state, loss_acc / max(n_micro, 1), recs, rng
-
-    def _mesh_step(self, state, worker_steps, step_key, i):
-        """SPMD execution: one plan, one psum, one update (plan_exec)."""
-        digests = None
-        if self._check_agreement:
-            digest = worker_steps_digest(worker_steps)
-            digests = [digest] * self._executor.n_ranks
-        state, out = self._executor.execute(
-            state,
-            worker_steps,
-            step_key=step_key,
-            step=i,
-            digests=digests,
-            measure=self._measure_ranks,
-            time_scale=lambda w: self._worker_time_scale.get(w, 1.0),
-        )
-        return state, float(out["loss"]), out["records"]
 
     def run(
         self,
@@ -178,28 +136,38 @@ class Trainer:
     ):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         hist = TrainHistory()
-        if self._executor is not None and not self._executor.is_placed(state):
-            state = self._executor.place_state(state)
+        engine = self.engine
+        state = engine.place_state(state)
+        item = next(data_iter) if n_steps > 0 else None
         for i in range(n_steps):
-            worker_steps = self._as_worker_steps(next(data_iter))
+            worker_steps = self._as_worker_steps(item)
             t0 = time.perf_counter()
             tok = sum(
                 bucket.tokens for ws in worker_steps for bucket, _ in ws
             )
             n_micro = sum(len(ws) for ws in worker_steps)
-            if self._executor is not None:
-                rng, sub = jax.random.split(rng)
-                state, loss, recs = self._mesh_step(state, worker_steps, sub, i)
-            else:
-                state, loss, recs, rng = self._emulated_step(
-                    state, worker_steps, rng, i
-                )
+            rng, sub = jax.random.split(rng)
+            state, out = engine.execute_step(
+                state, worker_steps, step_key=sub, step=i
+            )
+            if engine.async_dispatch and i + 1 < n_steps:
+                # devices are still computing step i: fetch step i+1 and
+                # stage its H2D transfers behind that compute
+                item = next(data_iter)
+                engine.prepare(self._as_worker_steps(item))
+            recs = engine.timing_records()
             jax.block_until_ready(state["step"])
             dt = time.perf_counter() - t0
+            loss = float(out.loss)
+            if not engine.async_dispatch and i + 1 < n_steps:
+                item = next(data_iter)
 
             hist.losses.append(loss)
             hist.step_times.append(dt)
             hist.tokens.append(tok)
+            if out.compiled:
+                hist.compile_steps.append(i)
+                hist.events.append(f"compile@{i}")
 
             if self.scheduler is not None:
                 self.scheduler.observe(recs)
@@ -212,10 +180,10 @@ class Trainer:
                     hist.events.append(f"failure@{i}:{failure['plan']}")
 
             if on_metrics is not None:
-                on_metrics(i, {"loss": hist.losses[-1], "time": dt, "tokens": tok})
+                on_metrics(i, {"loss": loss, "time": dt, "tokens": tok})
             if log_every and i % log_every == 0:
                 print(
-                    f"step {i:5d}  loss {hist.losses[-1]:.4f}  "
+                    f"step {i:5d}  loss {loss:.4f}  "
                     f"{tok/dt:,.0f} tok/s  ({n_micro} microbatches, "
                     f"{len(worker_steps)} ranks)"
                 )

@@ -54,9 +54,15 @@ def make_loss_fn(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callabl
         # attention is then scoped per document and RoPE restarts per doc
         seg = batch.get("segment_ids") if isinstance(batch, dict) else None
         if cfg.family == "mmdit":
+            # multi-clip packed windows additionally carry per-clip text
+            # segment ids so cross-attention is scoped to each clip's prompt
+            tseg = (
+                batch.get("text_segment_ids") if isinstance(batch, dict)
+                else None
+            )
             return M.rectified_flow_loss(
                 params, cfg, batch["latents"], batch["text"], rng, policy=policy,
-                unroll=unroll, segment_ids=seg,
+                unroll=unroll, segment_ids=seg, text_segment_ids=tseg,
             )
         memory = batch.get("memory") if isinstance(batch, dict) else None
         return T.lm_loss(
@@ -72,6 +78,24 @@ def make_loss_fn(cfg: ModelConfig, policy=None, unroll: bool = False) -> Callabl
         )
 
     return loss_fn
+
+
+def make_pool_grad_step(cfg: ModelConfig, policy=None) -> Callable:
+    """One pool microbatch's gradient step — the SINGLE definition every
+    executor shares (``oracle_step``, ``PlanExecutor``, ``EmulatedEngine``).
+
+    RNG derivation is the parity-critical part: ``fold_in(step_key,
+    pool_index)`` with the pool enumerated rank-major.  Keeping it defined
+    once means the <=1e-5 engine-vs-oracle gates can never drift because
+    one copy changed its rng or enumeration order.
+    """
+    loss_fn = make_loss_fn(cfg, policy)
+
+    def grad_step(params, batch, step_key, pool_index):
+        rng = jax.random.fold_in(step_key, pool_index)
+        return jax.value_and_grad(loss_fn)(params, batch, rng)
+
+    return grad_step
 
 
 def make_train_step(cfg: ModelConfig, opt: OptimizerConfig, policy=None,

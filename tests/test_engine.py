@@ -1,0 +1,396 @@
+"""Overlapped execution engine: one backend contract, two implementations.
+
+The acceptance gates for the engine refactor:
+
+* both engines implement the SAME gradient semantics — each must match the
+  single-device ``oracle_step`` reference, and they must match each other
+  bit-comparably through the backend-agnostic ``Trainer.run`` driver;
+* telemetry flows through the one ``timing_records`` contract (per worker,
+  per microbatch, compile executions excluded) in both backends;
+* async measured mesh mode produces byte-identical training states to the
+  serial measured mode (timing observation must never perturb math);
+* an adopted background-refined plan never has a higher predicted
+  max-rank load than its LPT seed (hypothesis property + loader-level
+  integration).
+"""
+
+import hashlib
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax = pytest.importorskip("jax")
+
+from repro.core.balancer import assign_lpt, makespan  # noqa: E402
+from repro.core.bucketing import BucketingPolicy, DataShape  # noqa: E402
+from repro.core.dispatch import (  # noqa: E402
+    PlanRefiner,
+    StepPlan,
+    StepPlanner,
+)
+from repro.data.pipeline import ShardedBucketedLoader  # noqa: E402
+from repro.data.synthetic import make_lm_batch  # noqa: E402
+from repro.distributed.plan_exec import (  # noqa: E402
+    PlanExecutor,
+    oracle_step,
+    rel_l2,
+)
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.adamw import OptimizerConfig  # noqa: E402
+from repro.train.engine import EmulatedEngine, MeshEngine  # noqa: E402
+from repro.train.loop import TrainHistory, Trainer  # noqa: E402
+from repro.train.steps import init_state  # noqa: E402
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs 4 (virtual) devices"
+)
+
+CFG = ModelConfig(
+    name="engine-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, head_dim=16, d_ff=64, vocab=64, dtype="float32",
+)
+OPT = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+
+SHAPES = [
+    DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4), DataShape(17, 64, 64, 4)
+]
+BUCKETS = BucketingPolicy(m_mem=2_000, m_comp=3e5, p=2.0).make_buckets(SHAPES)
+LOAD = lambda b: b.load(2.0)  # noqa: E731
+
+
+def _make_batch(rng, bucket):
+    key = jax.random.PRNGKey(int(rng.integers(2**31)))
+    return jax.device_get(
+        make_lm_batch(key, bucket.batch_size, bucket.seq_len, CFG.vocab)
+    )
+
+
+def _worker_steps(seed=0, n_workers=4):
+    planner = StepPlanner(
+        BUCKETS, None, n_workers=n_workers, budget=2 * 3e5,
+        budget_of=LOAD, strategy="lpt", seed=seed,
+    )
+    plan = planner.plan()
+    rng = np.random.default_rng(seed)
+    return [
+        [(plan.microbatches[i], _make_batch(rng, plan.microbatches[i]))
+         for i in g]
+        for g in plan.assignments
+    ]
+
+
+def _make_engine(kind, **kw):
+    if kind == "mesh":
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 (virtual) devices")
+        return MeshEngine(
+            make_data_mesh(4), CFG, OPT, measure="async", **kw
+        )
+    return EmulatedEngine(CFG, OPT, **kw)
+
+
+def _state_hash(state) -> str:
+    h = hashlib.sha256()
+    for leaf in jax.tree.leaves(jax.device_get(state)):
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+@pytest.mark.parametrize("kind", ["emulated", "mesh"])
+class TestEngineContract:
+    """The SAME parity/telemetry suite runs against both backends — the
+    tentpole's acceptance line: Trainer never branches on executor
+    internals, so nothing engine-specific may be needed to pass here."""
+
+    def test_matches_single_device_oracle(self, kind):
+        ws = _worker_steps(seed=1)
+        eng = _make_engine(kind)
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        key = jax.random.PRNGKey(7)
+        new_state, out = eng.execute_step(
+            eng.place_state(state0), ws, step_key=key, step=0
+        )
+        eng.timing_records()
+        ref_state, ref_out = oracle_step(CFG, OPT, state0, ws, step_key=key)
+        assert rel_l2(
+            jax.device_get(new_state["params"]),
+            jax.device_get(ref_state["params"]),
+        ) <= 1e-5
+        assert float(out.loss) == pytest.approx(
+            float(ref_out["loss"]), rel=1e-5
+        )
+        assert int(jax.device_get(new_state["step"])) == 1
+
+    def test_telemetry_per_worker_per_microbatch_compiles_excluded(self, kind):
+        ws = _worker_steps(seed=2)
+        n_micro = sum(len(share) for share in ws)
+        eng = _make_engine(kind)
+        state = eng.place_state(init_state(jax.random.PRNGKey(0), CFG, OPT))
+        state, out0 = eng.execute_step(
+            state, ws, step_key=jax.random.PRNGKey(0), step=0
+        )
+        recs0 = eng.timing_records()
+        assert out0.compiled  # every shape was fresh
+        assert len(recs0) < n_micro  # compile executions never enter
+        state, out1 = eng.execute_step(
+            state, ws, step_key=jax.random.PRNGKey(1), step=1
+        )
+        recs1 = eng.timing_records()
+        assert not out1.compiled
+        assert len(recs1) == n_micro  # warm: every microbatch recorded
+        assert {r.worker for r in recs1} == set(range(len(ws)))
+        assert {(r.batch_size, r.seq_len) for r in recs1} == {
+            (b.batch_size, b.seq_len) for share in ws for b, _ in share
+        }
+        assert all(r.compute_time > 0 for r in recs1)
+
+    def test_empty_rank_share_rejected(self, kind):
+        """Both backends reject the same malformed input: a present-but-
+        empty per-rank share (surplus-device idling is a mesh-level
+        concept, not a fan-out with holes)."""
+        ws = _worker_steps(seed=5)
+        ws[0] = []
+        eng = _make_engine(kind)
+        state = eng.place_state(init_state(jax.random.PRNGKey(0), CFG, OPT))
+        with pytest.raises(ValueError, match="empty microbatch list"):
+            eng.execute_step(state, ws, step_key=jax.random.PRNGKey(0), step=0)
+
+    def test_through_trainer_driver(self, kind):
+        loader = ShardedBucketedLoader(
+            BUCKETS, None, _make_batch, n_workers=4, budget=2 * 3e5,
+            budget_of=LOAD, seed=3,
+        )
+        trainer = Trainer(CFG, OPT, engine=_make_engine(kind))
+        state = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        try:
+            state, hist = trainer.run(
+                state, iter(loader), 3, rng=jax.random.PRNGKey(1), log_every=0
+            )
+        finally:
+            loader.close()
+        assert int(jax.device_get(state["step"])) == 3
+        assert len(hist.losses) == len(hist.step_times) == 3
+        assert all(np.isfinite(loss) for loss in hist.losses)
+        # compile steps are flagged as events and excluded from throughput
+        assert 0 in hist.compile_steps
+        assert "compile@0" in hist.events
+        assert hist.throughput > 0
+
+
+@needs_mesh
+def test_emulated_and_mesh_agree_through_trainer():
+    """The interchangeability gate: identical data + rng through the
+    backend-agnostic driver must give the same training trajectory on both
+    engines (pool-mean gradient semantics are engine-invariant)."""
+    def loader():
+        return ShardedBucketedLoader(
+            BUCKETS, None, _make_batch, n_workers=4, budget=2 * 3e5,
+            budget_of=LOAD, seed=11,
+        )
+
+    state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+    l1, l2 = loader(), loader()
+    try:
+        s_emu, h_emu = Trainer(CFG, OPT).run(
+            state0, iter(l1), 3, rng=jax.random.PRNGKey(2), log_every=0
+        )
+        s_mesh, h_mesh = Trainer(
+            CFG, OPT, mesh=make_data_mesh(4), measure_ranks="async"
+        ).run(state0, iter(l2), 3, rng=jax.random.PRNGKey(2), log_every=0)
+    finally:
+        l1.close()
+        l2.close()
+    assert rel_l2(
+        jax.device_get(s_emu["params"]), jax.device_get(s_mesh["params"])
+    ) <= 1e-5
+    for a, b in zip(h_emu.losses, h_mesh.losses):
+        assert a == pytest.approx(b, rel=1e-5)
+
+
+@needs_mesh
+def test_async_and_serial_measured_modes_identical_states():
+    """Timing observation must never perturb the math: the same seed and
+    fan-out stepped under measure="serial" and measure="async" end in
+    byte-identical training states."""
+    ws = _worker_steps(seed=4)
+    state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+
+    def run(mode):
+        ex = PlanExecutor(make_data_mesh(4), CFG, OPT)
+        state = ex.place_state(state0)
+        for i in range(2):
+            state, out = ex.execute(
+                state, ws, step_key=jax.random.PRNGKey(100 + i), step=i,
+                measure=mode,
+            )
+            if mode == "async":
+                records, rank_times = out["timers"].join()
+                assert len(rank_times) == 4
+                if i > 0:  # warm step: telemetry fully populated
+                    assert {r.worker for r in records} == {0, 1, 2, 3}
+                    assert all(r.timing == "device" for r in records)
+        return _state_hash(state)
+
+    assert run("serial") == run("async")
+
+
+@needs_mesh
+def test_mesh_staging_is_identity_on_results():
+    """H2D double-buffering is an optimization, never a semantic change:
+    pre-staging a step's batches yields the same state as not staging."""
+    ws = _worker_steps(seed=6)
+    state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+    key = jax.random.PRNGKey(9)
+
+    def run(stage):
+        ex = PlanExecutor(make_data_mesh(4), CFG, OPT)
+        if stage:
+            ex.stage(ws)
+        state, _ = ex.execute(ex.place_state(state0), ws, step_key=key)
+        return _state_hash(state)
+
+    assert run(False) == run(True)
+
+
+# -- overlapped knapsack refinement ------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    loads=st.lists(
+        st.floats(0.05, 100.0, allow_nan=False, allow_infinity=False),
+        min_size=2, max_size=32,
+    ),
+    n_workers=st.integers(1, 8),
+)
+def test_adopted_refined_plan_never_exceeds_lpt_seed(loads, n_workers):
+    """The adoption invariant: whatever the refiner publishes, ``best()``
+    never hands out a plan with higher predicted max-rank load than the
+    LPT seed (refine_swaps is monotone; adoption demands a STRICT win)."""
+    seed = StepPlan(
+        microbatches=tuple(range(len(loads))),
+        assignments=tuple(
+            tuple(g) for g in assign_lpt(loads, n_workers)
+        ),
+        loads=tuple(loads),
+        strategy="lpt",
+    )
+    refiner = PlanRefiner()
+    try:
+        ticket = refiner.refine(seed)
+        best = ticket.wait(timeout=10.0)
+        assert ticket.ready()
+        assert best.makespan() <= seed.makespan() + 1e-9
+        if best is not seed:  # adopted: the win must be strict
+            assert best.makespan() < seed.makespan()
+            assert sorted(i for g in best.assignments for i in g) == list(
+                range(len(loads))
+            )
+    finally:
+        refiner.close()
+
+
+def test_refine_ticket_best_before_completion_returns_seed():
+    from repro.core.dispatch import RefineTicket
+
+    seed = StepPlan(
+        microbatches=(0, 1), assignments=((0,), (1,)),
+        loads=(1.0, 2.0), strategy="lpt",
+    )
+    unfinished = RefineTicket(seed)  # never submitted: stays pending
+    assert not unfinished.ready()
+    assert unfinished.best() is seed  # not ready -> seed, never blocks
+
+
+def test_overlap_loader_adopts_refinements_exactly_once():
+    """End-to-end: an overlap loader's emitted plans are never worse than
+    LPT on the same pool, every pool microbatch is dispatched exactly
+    once, and consumers see complete per-rank steps."""
+    loader = ShardedBucketedLoader(
+        BUCKETS, None, _make_batch, n_workers=4, budget=2 * 3e5,
+        budget_of=LOAD, strategy="knapsack", overlap=True, seed=13,
+    )
+    try:
+        steps = [next(iter(loader)) for _ in range(6)]
+        for step in steps:
+            assert len(step) == 4
+            assert all(len(share) >= 1 for share in step)
+        for plan in loader.plans:
+            lpt = makespan(plan.loads, assign_lpt(plan.loads, 4))
+            assert plan.makespan() <= lpt + 1e-9
+            placed = sorted(i for g in plan.assignments for i in g)
+            assert placed == list(range(len(plan.microbatches)))
+            assert plan.strategy in ("lpt", "knapsack")
+        assert loader.refined_adopted >= 0  # counter is wired
+    finally:
+        loader.close()
+
+
+def test_planner_overlap_requires_knapsack_to_engage():
+    planner = StepPlanner(
+        BUCKETS, None, n_workers=4, budget=2 * 3e5, budget_of=LOAD,
+        strategy="lpt", seed=0, overlap=True,
+    )
+    plan, ticket = planner.plan_async()
+    assert ticket is None  # nothing to refine: degrades to plan()
+    assert plan.strategy == "lpt"
+    planner.close()
+
+
+# -- TrainHistory compile accounting -----------------------------------------
+
+
+def test_train_history_excludes_compile_steps_from_throughput():
+    hist = TrainHistory(
+        losses=[1.0, 1.0, 1.0],
+        step_times=[10.0, 1.0, 1.0],
+        tokens=[100, 100, 100],
+        compile_steps=[0],
+    )
+    # the 10 s compile step no longer drags 300 tok / 12 s down to 25:
+    assert hist.throughput == pytest.approx(200 / 2.0)
+    # degenerate: nothing but compile steps -> fall back to the full record
+    all_compile = TrainHistory(
+        losses=[1.0], step_times=[2.0], tokens=[100], compile_steps=[0]
+    )
+    assert all_compile.throughput == pytest.approx(50.0)
+
+
+def test_scheduler_overlap_refine_planner_lifecycle():
+    """A scheduler-built overlap planner spawns the refiner lazily and
+    releases it through AdaptiveLoadScheduler.close() (loaders only close
+    planners they own, so the scheduler must own this one's shutdown)."""
+    import threading
+
+    from repro.core import (
+        AdaptiveLoadScheduler, CostModel, SchedulerConfig,
+    )
+
+    model = CostModel(a=0.0, b=1.0, p=2.0, r2=1.0, n_samples=10)
+    sched = AdaptiveLoadScheduler(
+        SchedulerConfig(
+            target_sync=3200.0, m_mem=80.0, refit_interval=10_000,
+            min_samples=10_000, dispatch="knapsack", overlap_refine=True,
+        ),
+        SHAPES, initial_model=model, n_workers=4,
+    )
+    planner = sched.make_planner(seed=0)
+    before = threading.active_count()
+    seed_plan, ticket = planner.plan_async()
+    assert ticket is not None  # overlap + knapsack engaged
+    best = ticket.wait(10.0)
+    assert best.makespan() <= seed_plan.makespan() + 1e-9
+    assert threading.active_count() >= before  # refiner thread live
+    sched.close()
+    assert planner._refiner is None  # released; plan_async respawns lazily
+
+
+def test_scheduler_overlap_refine_requires_knapsack():
+    from repro.core import SchedulerConfig
+
+    with pytest.raises(ValueError, match="overlap_refine"):
+        SchedulerConfig(
+            target_sync=1.0, m_mem=80.0, dispatch="lpt", overlap_refine=True
+        )

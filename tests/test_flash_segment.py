@@ -347,18 +347,19 @@ def test_window_segment_ids_layout():
 
 
 def test_adaln_block_helper_never_exceeds_target():
-    from repro.kernels.fused_adaln.ops import _block_of, _divisor_block, _seq_block
+    from repro.kernels.fused_adaln.ops import _divisor_block
     from repro.kernels.fused_adaln.adaln import DEFAULT_D_BLOCK, DEFAULT_SEQ_BLOCK
 
     for n in (8, 40, 96, 97, 128, 640, 12289, 50000):
         for target in (DEFAULT_SEQ_BLOCK, DEFAULT_D_BLOCK):
             blk = _divisor_block(n, target)
             assert blk <= target and n % blk == 0
-    assert _seq_block(97) == 97  # below the target: itself VMEM-safe
-    # prime above the target: the old code fell back to n (12289-row blocks);
-    # now degenerate -> 1, and callers fall back to the jnp ref instead
-    assert _seq_block(12289) == 1
-    assert _block_of(12289, DEFAULT_D_BLOCK) == 1
+    assert _divisor_block(97, DEFAULT_SEQ_BLOCK) == 97  # below the target:
+    # itself VMEM-safe.  Prime above the target: the old code fell back to n
+    # (12289-row blocks); now degenerate -> 1, and callers fall back to the
+    # jnp ref instead
+    assert _divisor_block(12289, DEFAULT_SEQ_BLOCK) == 1
+    assert _divisor_block(12289, DEFAULT_D_BLOCK) == 1
 
 
 def test_adaln_prime_seq_falls_back_to_ref():
