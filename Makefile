@@ -2,7 +2,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-attn example
+.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-attn example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -33,6 +33,13 @@ bench-overlap:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 		--only dispatch --smoke --mesh --overlap
+
+# kill-at-step-k / resume parity through the real Trainer + checkpoint
+# stack (byte-identical plan digests, <=1e-5 parameter parity)
+bench-resume:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --resume
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention

@@ -91,6 +91,10 @@ def main() -> None:
                     help="add the overlapped-execution comparison (async "
                          "device-timed dispatch vs serial measured baseline; "
                          "requires --mesh)")
+    ap.add_argument("--resume", action="store_true",
+                    help="add the kill-and-resume parity section to the "
+                         "dispatch bench (checkpoint/restore walls, digest "
+                         "+ parameter parity)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results as JSON (CI artifact)")
     args = ap.parse_args()
@@ -130,6 +134,8 @@ def main() -> None:
                 kwargs["mesh"] = args.mesh
             if "overlap" in params:
                 kwargs["overlap"] = args.overlap
+            if "resume" in params:
+                kwargs["resume"] = args.resume
             results[name] = m.run(csv, **kwargs)
         except Exception:  # noqa: BLE001
             failures.append(name)

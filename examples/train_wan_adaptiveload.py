@@ -37,7 +37,7 @@ from repro.distributed.fault_tolerance import (
 )
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig
-from repro.train.loop import Trainer
+from repro.train.loop import Trainer, deserialize_rng_key
 from repro.train.steps import init_state
 
 
@@ -90,6 +90,18 @@ def main() -> None:
         ),
         shapes, initial_model=model, n_workers=args.workers,
     )
+    # full run-state resume: restore the scheduler's closed-loop state
+    # BEFORE building the planner/loader so the restored fit/derate shapes
+    # dispatch from the first resumed step
+    run_state = None
+    start = 0
+    if args.resume and store.latest_step(args.ckpt_dir) is not None:
+        run_state = store.load_run_state(args.ckpt_dir)
+        if run_state is not None:
+            start = run_state["step"]
+            if "scheduler" in run_state:
+                sched.load_state_dict(run_state["scheduler"])
+
     planner = sched.make_planner(seed=0)
     print(sched.describe())
 
@@ -104,13 +116,14 @@ def main() -> None:
     loader = ShardedBucketedLoader(
         sched.buckets, None, make_batch,
         n_workers=args.workers, planner=planner,
+        resume_state=(run_state or {}).get("loader"),
     )
 
     ft = FaultTolerantRunner(
         ckpt_dir=args.ckpt_dir,
         cadence=CheckpointCadence(ckpt_cost_s=1.0, mtbf_s=7200.0,
                                   min_interval_steps=50),
-        monitor=HeartbeatMonitor(n_workers=1, timeout_s=1e9),
+        monitor=HeartbeatMonitor(n_workers=args.workers, timeout_s=1e9),
     )
 
     state = init_state(jax.random.PRNGKey(0), cfg, opt)
@@ -118,12 +131,21 @@ def main() -> None:
     print(f"model: {n_params/1e6:.1f}M params")
     if args.resume and store.latest_step(args.ckpt_dir) is not None:
         state = store.restore(args.ckpt_dir, state)
-        print(f"resumed from step {store.latest_step(args.ckpt_dir)}")
+        print(f"resumed from step {start} "
+              f"({'full run state' if run_state else 'weights only'})")
 
     scale = (
         {args.workers - 1: args.straggler} if args.straggler != 1.0 else None
     )
-    trainer = Trainer(cfg, opt, scheduler=sched, ft=ft, worker_time_scale=scale)
+
+    def run_state_of(held: int) -> dict:
+        return {
+            "loader": loader.state_dict(rewind=held),
+            "scheduler": sched.state_dict(),
+        }
+
+    trainer = Trainer(cfg, opt, scheduler=sched, ft=ft,
+                      worker_time_scale=scale, run_state_of=run_state_of)
 
     seen_updates = 0
 
@@ -134,11 +156,18 @@ def main() -> None:
             seen_updates = len(sched.updates)
             print(f"  [plan update @ step {step}] {sched.updates[-1].reason}")
 
-    state, hist = trainer.run(
-        state, iter(loader), args.steps, log_every=20, on_metrics=log_plan_updates
+    n_run = max(args.steps - start, 0)
+    trainer_rng = (
+        None if run_state is None
+        else deserialize_rng_key(run_state["trainer"]["rng"])
     )
+    state, hist = trainer.run(
+        state, iter(loader), n_run, rng=trainer_rng, start_step=start,
+        log_every=20, on_metrics=log_plan_updates,
+    )
+    store.save(state, start + n_run, args.ckpt_dir,
+               run_state=trainer.last_run_state)
     loader.close()
-    store.save(state, args.steps, args.ckpt_dir)
 
     plans = loader.plans
     if plans:

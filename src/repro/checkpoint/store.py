@@ -4,11 +4,20 @@ Design (no orbax in the container; same contract):
 
 * every pytree leaf is saved as its own entry keyed by its flattened path —
   the manifest records paths, shapes, dtypes and the training step;
+* the manifest optionally carries a ``run_state`` JSON blob: the run's
+  *non-weight* replayable state (planner RNG streams, scheduler fit/derate,
+  trainer RNG key) so a resumed job replays the identical plan stream, not
+  just the weights.  Manifest v1 checkpoints (weights-only) restore
+  unchanged — ``load_run_state`` simply returns ``None`` for them;
 * writes go to ``<dir>/tmp-<step>`` then ``os.replace`` to ``step-<n>``:
   a crash mid-write can never corrupt the latest valid checkpoint
   (fault-tolerance requirement: restart always finds a consistent state);
+  stale ``tmp-*`` directories a crash left behind are swept by the next
+  ``save``/``latest_step`` (age-gated so a live concurrent write is never
+  mistaken for debris);
 * restore is mesh-shape-agnostic: arrays are stored as global host arrays
-  and re-sharded by whatever shardings the restoring job passes, so a job
+  and re-sharded by whatever shardings the restoring job passes (a ``like``
+  leaf carrying a ``.sharding`` gets ``jax.device_put`` onto it), so a job
   restarted on a *different* worker count (elastic scaling) restores
   transparently;
 * retention keeps the newest K checkpoints.
@@ -25,6 +34,8 @@ from typing import Any
 import jax
 import numpy as np
 
+MANIFEST_VERSION = 2
+
 
 def _flatten(tree) -> dict[str, Any]:
     flat = {}
@@ -34,17 +45,55 @@ def _flatten(tree) -> dict[str, Any]:
     return flat
 
 
-def save(state, step: int, directory: str | os.PathLike, *, keep: int = 3) -> Path:
+#: a tmp-* directory younger than this is treated as a LIVE write, not
+#: crash debris — sweeping it would delete a concurrent writer's
+#: in-flight checkpoint between its mkdir and os.replace
+TMP_SWEEP_MIN_AGE_S = 3600.0
+
+
+def _sweep_tmp(d: Path, *, skip: Path | None = None) -> None:
+    """Remove partial ``tmp-*`` writes a crashed job left behind.
+
+    Age-gated: only directories untouched for ``TMP_SWEEP_MIN_AGE_S`` are
+    removed, so a reader (``latest_step``) or a second writer sharing the
+    directory can never destroy an in-flight save."""
+    import time
+
+    now = time.time()
+    for p in d.glob("tmp-*"):
+        if not p.is_dir() or p == skip:
+            continue
+        try:
+            age = now - p.stat().st_mtime
+        except OSError:
+            continue  # vanished underneath us: another sweeper won
+        if age >= TMP_SWEEP_MIN_AGE_S:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def save(
+    state,
+    step: int,
+    directory: str | os.PathLike,
+    *,
+    keep: int = 3,
+    run_state: dict | None = None,
+) -> Path:
+    """Write one checkpoint; ``run_state`` (JSON-serializable) rides in the
+    manifest so weights and replayable run state commit atomically."""
     d = Path(directory)
     d.mkdir(parents=True, exist_ok=True)
     tmp = d / f"tmp-{step}"
     final = d / f"step-{step:09d}"
     if tmp.exists():
         shutil.rmtree(tmp)
+    _sweep_tmp(d, skip=tmp)
     tmp.mkdir()
 
     flat = _flatten(state)
-    manifest = {"step": int(step), "leaves": {}}
+    manifest = {"version": MANIFEST_VERSION, "step": int(step), "leaves": {}}
+    if run_state is not None:
+        manifest["run_state"] = run_state
     arrays = {}
     for i, (key, leaf) in enumerate(sorted(flat.items())):
         arr = np.asarray(jax.device_get(leaf))
@@ -73,22 +122,42 @@ def _apply_retention(d: Path, keep: int) -> None:
 
 def latest_step(directory: str | os.PathLike) -> int | None:
     d = Path(directory)
+    if d.is_dir():
+        _sweep_tmp(d)  # restart path: clear any crash debris first
     steps = sorted(p.name for p in d.glob("step-*") if p.is_dir())
     if not steps:
         return None
     return int(steps[-1].split("-")[1])
 
 
-def restore(directory: str | os.PathLike, like, *, step: int | None = None):
-    """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs).  Raises if the stored tree doesn't match."""
+def _read_manifest(directory: str | os.PathLike, step: int | None) -> tuple[Path, dict]:
     d = Path(directory)
     if step is None:
         step = latest_step(d)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {d}")
     src = d / f"step-{step:09d}"
-    manifest = json.loads((src / "manifest.json").read_text())
+    return src, json.loads((src / "manifest.json").read_text())
+
+
+def load_run_state(
+    directory: str | os.PathLike, *, step: int | None = None
+) -> dict | None:
+    """The checkpoint's ``run_state`` blob, or ``None`` for weights-only
+    (v1 or run_state-less) checkpoints — callers fall back to a fresh run
+    state and still restore the weights."""
+    _, manifest = _read_manifest(directory, step)
+    return manifest.get("run_state")
+
+
+def restore(directory: str | os.PathLike, like, *, step: int | None = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Raises if the stored tree doesn't match.  A leaf
+    of ``like`` that carries a ``.sharding`` (a committed ``jax.Array`` or
+    a ShapeDtypeStruct built with one) has its restored value
+    ``jax.device_put`` onto that sharding — the restoring job's mesh, not
+    the saving job's, decides placement."""
+    src, manifest = _read_manifest(directory, step)
     data = np.load(src / "arrays.npz")
 
     flat_like = _flatten(like)
@@ -114,7 +183,11 @@ def restore(directory: str | os.PathLike, like, *, step: int | None = None):
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     ordered = []
-    for path, _ in paths:
+    for path, want in paths:
         key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        ordered.append(jax.numpy.asarray(leaves_by_key[key]))
+        sharding = getattr(want, "sharding", None)
+        if sharding is not None:
+            ordered.append(jax.device_put(leaves_by_key[key], sharding))
+        else:
+            ordered.append(jax.numpy.asarray(leaves_by_key[key]))
     return jax.tree_util.tree_unflatten(treedef, ordered)

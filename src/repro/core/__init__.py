@@ -51,6 +51,7 @@ from .dispatch import (
     microbatch_key,
     normalized_weights,
     plan_digest,
+    refine_fixed_rounds,
     refine_swaps,
 )
 from .simulator import (
@@ -96,6 +97,7 @@ __all__ = [
     "microbatch_key",
     "normalized_weights",
     "plan_digest",
+    "refine_fixed_rounds",
     "refine_swaps",
     "CorpusSampler",
     "SimulationResult",

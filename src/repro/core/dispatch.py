@@ -29,10 +29,25 @@ assignment at the next step boundary via :meth:`RefineTicket.best` — iff it
 strictly lowers the predicted max-rank load — and otherwise dispatches the
 seed.  Because refinement only *regroups* the pool (never changes its
 microbatches), already-materialized batches are reusable under either
-assignment.  Note the adoption is wall-clock dependent, so overlapped plans
-are for the single-controller path; multi-host deployments that all-gather
-plan digests need the deterministic synchronous ``knapsack`` strategy (or a
-fixed-round refinement both hosts run identically).
+assignment.  That adoption rule is wall-clock dependent, so plain
+overlapped plans are for the single-controller path only.
+
+**Deterministic fixed-round refinement** (``PlanRefiner(rounds=k,
+deterministic=True)``) removes the wall-clock dependence: the refiner runs
+*exactly* ``k`` exchange rounds of :func:`refine_fixed_rounds` — stall
+escapes seeded from the plan digest — and the ticket's ``best()`` *waits*
+for that result instead of falling back to the seed on a slow thread.  The
+adopted plan is then a pure function of (pool, loads, assignment): two
+hosts that derive the same seed plan adopt the same refined plan no matter
+how their threads are scheduled, which is what lets multi-host digest
+agreement include overlapped refinement (ROADMAP (e)) and what makes a
+killed-and-resumed run replay the identical plan stream.
+
+**Resumable plan streams**: :meth:`StepPlanner.state_dict` /
+:meth:`StepPlanner.load_state_dict` capture/restore the planner's RNG
+bit-generator state and plan counter, so the draw sequence is replayable
+from any step (the loader snapshots this per emitted plan; see
+``data.pipeline.ShardedBucketedLoader.state_dict``).
 
 The planner is shared state between the data pipeline (its prefetch thread
 calls :meth:`StepPlanner.plan` each step) and the closed-loop scheduler
@@ -157,6 +172,57 @@ class StepPlan:
         return plan_digest(self)
 
 
+def _apply_best_exchange(
+    loads: Sequence[float],
+    groups: list[list[int]],
+    totals: list[float],
+    hi: int,
+    lo: int,
+    eps: float,
+) -> bool:
+    """Apply the best single-item move/swap between workers ``hi`` and
+    ``lo`` (``totals[hi] >= totals[lo]``), minimizing the pair's new
+    maximum.  Returns True iff an exchange strictly improved the pair max.
+    The pair's maximum never increases, so the global makespan is monotone
+    non-increasing under any sequence of these exchanges.  Workers are
+    never emptied (a move requires the donor to keep >= 1 item)."""
+    pair_max = totals[hi]
+    if pair_max - totals[lo] <= eps:
+        return False
+    best_max = pair_max
+    best: tuple[str, int, int] | None = None
+    if len(groups[hi]) > 1:
+        for i in groups[hi]:
+            cand = max(totals[hi] - loads[i], totals[lo] + loads[i])
+            if cand < best_max - eps:
+                best_max, best = cand, ("move", i, -1)
+    for i in groups[hi]:
+        for j in groups[lo]:
+            delta = loads[i] - loads[j]
+            if delta <= 0:
+                continue
+            cand = max(totals[hi] - delta, totals[lo] + delta)
+            if cand < best_max - eps:
+                best_max, best = cand, ("swap", i, j)
+    if best is None:
+        return False
+    kind, i, j = best
+    if kind == "move":
+        groups[hi].remove(i)
+        groups[lo].append(i)
+        totals[hi] -= loads[i]
+        totals[lo] += loads[i]
+    else:
+        groups[hi].remove(i)
+        groups[lo].remove(j)
+        groups[hi].append(j)
+        groups[lo].append(i)
+        delta = loads[i] - loads[j]
+        totals[hi] -= delta
+        totals[lo] += delta
+    return True
+
+
 def refine_swaps(
     loads: Sequence[float],
     assignment: Sequence[Sequence[int]],
@@ -178,55 +244,70 @@ def refine_swaps(
     for _ in range(max_rounds):
         hi = max(range(len(groups)), key=totals.__getitem__)
         lo = min(range(len(groups)), key=totals.__getitem__)
-        pair_max = totals[hi]
-        if pair_max - totals[lo] <= eps:
+        if not _apply_best_exchange(loads, groups, totals, hi, lo, eps):
             break
-        best_max = pair_max
-        best: tuple[str, int, int] | None = None
-        if len(groups[hi]) > 1:
-            for i in groups[hi]:
-                cand = max(totals[hi] - loads[i], totals[lo] + loads[i])
-                if cand < best_max - eps:
-                    best_max, best = cand, ("move", i, -1)
-        for i in groups[hi]:
-            for j in groups[lo]:
-                delta = loads[i] - loads[j]
-                if delta <= 0:
-                    continue
-                cand = max(totals[hi] - delta, totals[lo] + delta)
-                if cand < best_max - eps:
-                    best_max, best = cand, ("swap", i, j)
-        if best is None:
-            break
-        kind, i, j = best
-        if kind == "move":
-            groups[hi].remove(i)
-            groups[lo].append(i)
-            totals[hi] -= loads[i]
-            totals[lo] += loads[i]
-        else:
-            groups[hi].remove(i)
-            groups[lo].remove(j)
-            groups[hi].append(j)
-            groups[lo].append(i)
-            delta = loads[i] - loads[j]
-            totals[hi] -= delta
-            totals[lo] += delta
+    return groups
+
+
+def refine_fixed_rounds(
+    loads: Sequence[float],
+    assignment: Sequence[Sequence[int]],
+    *,
+    rounds: int,
+    seed_bytes: bytes,
+    eps: float = 1e-12,
+) -> list[list[int]]:
+    """Exactly ``rounds`` exchange rounds — a pure function of its inputs.
+
+    Every round first tries the greedy heaviest/lightest exchange; when
+    that pair has stalled, a random *other* pair (drawn from an RNG seeded
+    by ``seed_bytes``, canonically the seed plan's digest) gets one chance,
+    which lets later rounds escape the local minimum the greedy pass
+    converges to.  Unlike :func:`refine_swaps` there is no data-dependent
+    early exit on improvement, and the RNG consumption pattern depends only
+    on (loads, assignment, seed_bytes) — so every host, thread schedule,
+    and resumed run computes byte-identical output.  The makespan is still
+    monotone non-increasing (each exchange only ever lowers its pair's
+    maximum)."""
+    if rounds < 1:
+        raise ValueError("deterministic refinement needs rounds >= 1")
+    rng = np.random.default_rng(int.from_bytes(seed_bytes[:8], "big"))
+    groups = [list(g) for g in assignment]
+    totals = [sum(loads[i] for i in g) for g in groups]
+    n = len(groups)
+    for _ in range(rounds):
+        hi = max(range(n), key=totals.__getitem__)
+        lo = min(range(n), key=totals.__getitem__)
+        if _apply_best_exchange(loads, groups, totals, hi, lo, eps):
+            continue
+        if n <= 2:
+            continue  # greedy pair is the only pair: nothing left to try
+        a, b = (int(x) for x in rng.choice(n, size=2, replace=False))
+        if totals[a] < totals[b]:
+            a, b = b, a
+        _apply_best_exchange(loads, groups, totals, a, b, eps)
     return groups
 
 
 class RefineTicket:
     """Handle to one plan's background knapsack-swap refinement.
 
-    ``best()`` never blocks: it returns the refined plan once the worker
-    has finished AND the refinement *strictly* lowers the predicted
-    max-rank load, and the LPT seed otherwise — so a consumer polling at a
-    step boundary always gets a dispatchable plan whose makespan is <= the
-    seed's (the adoption invariant the hypothesis suite pins down).
+    In the default (opportunistic) mode ``best()`` never blocks: it returns
+    the refined plan once the worker has finished AND the refinement
+    *strictly* lowers the predicted max-rank load, and the LPT seed
+    otherwise — so a consumer polling at a step boundary always gets a
+    dispatchable plan whose makespan is <= the seed's (the adoption
+    invariant the hypothesis suite pins down).
+
+    A *deterministic* ticket (fixed-round refiner) instead **waits** for
+    the refinement in ``best()``: adoption must be a pure function of the
+    seed plan, never of how fast the worker thread ran, so that every host
+    — and every killed-and-resumed run — dispatches the same plan.
     """
 
-    def __init__(self, seed: StepPlan):
+    def __init__(self, seed: StepPlan, *, deterministic: bool = False):
         self.seed = seed
+        self.deterministic = deterministic
         self._done = threading.Event()
         self._refined: StepPlan | None = None
 
@@ -238,7 +319,10 @@ class RefineTicket:
         return self._done.is_set()
 
     def best(self, *, eps: float = 1e-12) -> StepPlan:
-        """The plan to dispatch *now*: refined iff done and strictly better."""
+        """The plan to dispatch *now*: refined iff done and strictly better
+        (deterministic tickets block until their fixed rounds complete)."""
+        if self.deterministic:
+            self._done.wait()
         refined = self._refined if self._done.is_set() else None
         if refined is not None and refined.makespan() < self.seed.makespan() - eps:
             return refined
@@ -259,11 +343,30 @@ class PlanRefiner:
     than the step cadence), the *oldest* unstarted tickets resolve to their
     seeds — a late refinement of a stale plan is worthless, and dropping it
     keeps the thread from falling ever further behind the training loop.
+
+    With ``deterministic=True`` the worker instead runs *exactly*
+    ``rounds`` exchange rounds of :func:`refine_fixed_rounds` seeded from
+    the seed plan's digest, tickets block in ``best()`` until their result
+    is ready, and the overflow drop above is disabled (dropping is a
+    wall-clock decision; the consumer's blocking ``best()`` bounds the
+    queue naturally instead).  Same inputs => same adopted plan on every
+    host and every resume.
     """
 
-    def __init__(self, *, max_pending: int = 4, max_rounds: int = 64):
+    def __init__(
+        self,
+        *,
+        max_pending: int = 4,
+        max_rounds: int = 64,
+        rounds: int | None = None,
+        deterministic: bool = False,
+    ):
+        if deterministic and rounds is None:
+            rounds = 16
         self._max_pending = max_pending
         self._max_rounds = max_rounds
+        self.rounds = rounds
+        self.deterministic = deterministic
         self._cv = threading.Condition()
         self._queue: list[RefineTicket] = []
         self._closed = False
@@ -271,16 +374,41 @@ class PlanRefiner:
         self._thread.start()
 
     def refine(self, seed: StepPlan) -> RefineTicket:
-        ticket = RefineTicket(seed)
+        ticket = RefineTicket(seed, deterministic=self.deterministic)
         with self._cv:
             if self._closed:
-                ticket._finish(None)  # closed refiner: seed stands
+                if self.deterministic:
+                    # a deterministic ticket must still resolve to the
+                    # fixed-round result, never timing-dependently to the
+                    # seed — compute it inline on the caller's thread
+                    ticket._finish(self._refined_plan(seed))
+                else:
+                    ticket._finish(None)  # closed refiner: seed stands
                 return ticket
             self._queue.append(ticket)
-            while len(self._queue) > self._max_pending:
-                self._queue.pop(0)._finish(None)
+            if not self.deterministic:
+                while len(self._queue) > self._max_pending:
+                    self._queue.pop(0)._finish(None)
             self._cv.notify()
         return ticket
+
+    def _refined_plan(self, seed: StepPlan) -> StepPlan:
+        if self.deterministic:
+            groups = refine_fixed_rounds(
+                seed.loads,
+                seed.assignments,
+                rounds=self.rounds,
+                seed_bytes=seed.digest(),
+            )
+        else:
+            groups = refine_swaps(
+                seed.loads, seed.assignments, max_rounds=self._max_rounds
+            )
+        return dataclasses.replace(
+            seed,
+            assignments=tuple(tuple(g) for g in groups),
+            strategy="knapsack",
+        )
 
     def _worker(self) -> None:
         while True:
@@ -290,24 +418,16 @@ class PlanRefiner:
                 if self._closed and not self._queue:
                     return
                 ticket = self._queue.pop(0)
-            groups = refine_swaps(
-                ticket.seed.loads,
-                ticket.seed.assignments,
-                max_rounds=self._max_rounds,
-            )
-            ticket._finish(
-                dataclasses.replace(
-                    ticket.seed,
-                    assignments=tuple(tuple(g) for g in groups),
-                    strategy="knapsack",
-                )
-            )
+            ticket._finish(self._refined_plan(ticket.seed))
 
     def close(self) -> None:
         with self._cv:
             self._closed = True
             for t in self._queue:
-                t._finish(None)
+                # deterministic tickets must resolve to the fixed-round
+                # result even on shutdown (a blocked best() would otherwise
+                # adopt timing-dependently or hang forever)
+                t._finish(self._refined_plan(t.seed) if t.deterministic else None)
             self._queue.clear()
             self._cv.notify_all()
         self._thread.join(timeout=2.0)
@@ -356,6 +476,8 @@ class StepPlanner:
         strategy: str = "lpt",
         seed: int = 0,
         overlap: bool = False,
+        deterministic_refine: bool = False,
+        refine_rounds: int = 16,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -364,6 +486,8 @@ class StepPlanner:
                 f"unknown dispatch strategy {strategy!r}; expected one of "
                 f"{DISPATCH_STRATEGIES}"
             )
+        if refine_rounds < 1:
+            raise ValueError("refine_rounds must be >= 1")
         self._lock = threading.Lock()
         self._rng = np.random.default_rng(seed)
         self.n_workers = n_workers
@@ -373,9 +497,14 @@ class StepPlanner:
         self.load_of = load_of if load_of is not None else budget_of
         # overlapped knapsack refinement: plan_async() returns the LPT seed
         # and runs the swap passes on a PlanRefiner thread (spawned lazily
-        # so plain synchronous planners never start one)
+        # so plain synchronous planners never start one).  deterministic
+        # mode runs exactly refine_rounds digest-seeded rounds and blocks
+        # adoption on the result — same adopted plan on every host/resume.
         self.overlap = overlap
+        self.deterministic_refine = deterministic_refine
+        self.refine_rounds = refine_rounds
         self._refiner: PlanRefiner | None = None
+        self._plan_count = 0  # pools drawn so far (the resumable plan index)
         self._set_buckets(buckets, weights)
 
     def _set_buckets(
@@ -404,12 +533,26 @@ class StepPlanner:
         n_workers: int | None = None,
         strategy: str | None = None,
         overlap: bool | None = None,
+        deterministic_refine: bool | None = None,
+        refine_rounds: int | None = None,
     ) -> None:
         """Swap any part of the plan mid-training (scheduler replans,
         elastic resizes) without draining the pipeline."""
+        stale_refiner: PlanRefiner | None = None
         with self._lock:
             if overlap is not None:
                 self.overlap = overlap
+            if deterministic_refine is not None:
+                self.deterministic_refine = deterministic_refine
+            if refine_rounds is not None:
+                if refine_rounds < 1:
+                    raise ValueError("refine_rounds must be >= 1")
+                self.refine_rounds = refine_rounds
+            if (deterministic_refine is not None or refine_rounds is not None) \
+                    and self._refiner is not None:
+                # the running refiner was built for the old mode; retire it
+                # and let plan_async lazily respawn a matching one
+                stale_refiner, self._refiner = self._refiner, None
             if strategy is not None:
                 if strategy not in DISPATCH_STRATEGIES:
                     raise ValueError(f"unknown dispatch strategy {strategy!r}")
@@ -432,6 +575,8 @@ class StepPlanner:
                 self._set_buckets(
                     buckets if buckets is not None else self._buckets, weights
                 )
+        if stale_refiner is not None:
+            stale_refiner.close()
 
     # -- planning ------------------------------------------------------------
 
@@ -441,7 +586,8 @@ class StepPlanner:
             buckets, probs = self._buckets, self._probs
             n_workers, budget = self.n_workers, self.budget
             budget_of = self.budget_of
-            rng = rng if rng is not None else self._rng
+            external = rng is not None
+            rng = rng if external else self._rng
             cluster_budget = n_workers * budget
             pool: list[Bucket] = []
             acc = 0.0
@@ -449,6 +595,8 @@ class StepPlanner:
                 b = buckets[int(rng.choice(len(buckets), p=probs))]
                 pool.append(b)
                 acc += budget_of(b)
+            if not external:
+                self._plan_count += 1
             return pool
 
     def plan_pool(
@@ -500,11 +648,66 @@ class StepPlanner:
                     strategy="lpt",
                 )
                 if self._refiner is None:
-                    self._refiner = PlanRefiner()
+                    self._refiner = PlanRefiner(
+                        deterministic=self.deterministic_refine,
+                        rounds=self.refine_rounds,
+                    )
                 refiner = self._refiner
         if not overlapped:
             return self.plan_pool(pool), None
         return seed, refiner.refine(seed)
+
+    # -- run-state checkpointing ---------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable replayable state: the RNG bit-generator state,
+        plan counter, and the numeric plan knobs.  Callables (``budget_of``
+        / ``load_of``) and the bucket table are deliberately NOT captured —
+        they are code + scheduler outputs, reconstructed by whoever rebuilds
+        the planner (the scheduler's own ``state_dict`` replays the fit that
+        produced them)."""
+        with self._lock:
+            return {
+                "version": 1,
+                "rng": self._rng.bit_generator.state,
+                "plan_count": self._plan_count,
+                "n_workers": self.n_workers,
+                "strategy": self.strategy,
+                "budget": self.budget,
+                "overlap": self.overlap,
+                "deterministic_refine": self.deterministic_refine,
+                "refine_rounds": self.refine_rounds,
+            }
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore :meth:`state_dict` output: the next ``plan()`` draws the
+        exact pool the captured planner would have drawn next."""
+        if sd.get("strategy") not in DISPATCH_STRATEGIES:
+            raise ValueError(
+                f"unknown dispatch strategy {sd.get('strategy')!r} in state"
+            )
+        with self._lock:
+            self._rng.bit_generator.state = sd["rng"]
+            self._plan_count = int(sd["plan_count"])
+            self.n_workers = int(sd["n_workers"])
+            self.strategy = sd["strategy"]
+            self.budget = float(sd["budget"])
+            self.overlap = bool(sd["overlap"])
+            self.deterministic_refine = bool(sd["deterministic_refine"])
+            self.refine_rounds = int(sd["refine_rounds"])
+            # an already-spawned refiner was built for the pre-restore
+            # mode; retire it (plan_async lazily respawns a matching one)
+            # or post-restore tickets would adopt with the OLD rules and
+            # the replayed stream could silently diverge
+            stale, self._refiner = self._refiner, None
+        if stale is not None:
+            stale.close()
+
+    @property
+    def plan_count(self) -> int:
+        """Pools drawn so far (the plan index a resume replays from)."""
+        with self._lock:
+            return self._plan_count
 
     def close(self) -> None:
         """Stop the background refiner (no-op for synchronous planners)."""
@@ -533,5 +736,6 @@ __all__ = [
     "microbatch_key",
     "normalized_weights",
     "plan_digest",
+    "refine_fixed_rounds",
     "refine_swaps",
 ]

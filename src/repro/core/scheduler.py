@@ -46,6 +46,12 @@ class SchedulerConfig:
     # background-refined assignment at the next step boundary (only
     # meaningful with dispatch="knapsack"; see core.dispatch.PlanRefiner)
     overlap_refine: bool = False
+    # deterministic fixed-round refinement: exactly refine_rounds
+    # digest-seeded exchange rounds, adoption blocking on the result — the
+    # adopted plan is a pure function of the seed plan, so every host (and
+    # every killed-and-resumed run) dispatches identically
+    deterministic_refine: bool = False
+    refine_rounds: int = 16
 
     def __post_init__(self) -> None:
         if self.dispatch not in DISPATCH_STRATEGIES:
@@ -58,6 +64,14 @@ class SchedulerConfig:
                 "overlap_refine only applies to dispatch='knapsack' (other "
                 "strategies have no refinement to overlap)"
             )
+        if self.deterministic_refine and not self.overlap_refine:
+            raise ValueError(
+                "deterministic_refine configures the overlapped refiner; "
+                "the synchronous knapsack pass is already deterministic — "
+                "set overlap_refine=True or drop deterministic_refine"
+            )
+        if self.refine_rounds < 1:
+            raise ValueError("refine_rounds must be >= 1")
 
 
 @dataclasses.dataclass
@@ -142,6 +156,8 @@ class AdaptiveLoadScheduler:
             strategy=self.config.dispatch,
             seed=seed,
             overlap=self.config.overlap_refine,
+            deterministic_refine=self.config.deterministic_refine,
+            refine_rounds=self.config.refine_rounds,
         )
         return self.planner
 
@@ -190,6 +206,43 @@ class AdaptiveLoadScheduler:
         elif not stragglers and self._derate != 1.0:
             self._derate = 1.0
             self._replan(self._steps_seen, self.model, "straggler cleared")
+
+    # -- run-state checkpointing --------------------------------------------
+
+    def state_dict(self) -> dict:
+        """JSON-serializable closed-loop state: the fitted cost model, the
+        straggler-derate latch, the step counter, and the worker count —
+        everything that determines the *current plan*.  The raw telemetry
+        buffer is deliberately not captured: it is a refit input that
+        re-accumulates within one ``refit_interval``, while the fit it
+        already produced (the thing plans are derived from) IS restored."""
+        return {
+            "version": 1,
+            "model": dataclasses.asdict(self.model),
+            "derate": self._derate,
+            "steps_seen": self._steps_seen,
+            "n_workers": self.n_workers,
+            "n_updates": len(self.updates),
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Restore :meth:`state_dict`: the policy/bucket table are rebuilt
+        from the restored fit + derate and pushed into an attached planner,
+        so the closed loop resumes exactly where the checkpoint left it."""
+        self.model = CostModel(**sd["model"])
+        self._derate = float(sd["derate"])
+        self._steps_seen = int(sd["steps_seen"])
+        self.n_workers = int(sd["n_workers"])
+        self.policy = self._policy_from_model(self.model)
+        self.buckets = self.policy.make_buckets(self.shapes)
+        if self.planner is not None:
+            p = self.model.p
+            self.planner.update(
+                buckets=self.buckets,
+                budget=self.policy.m_comp * self._planner_accumulation,
+                budget_of=lambda b: b.load(p),
+                n_workers=self.n_workers,
+            )
 
     # -- lifecycle ----------------------------------------------------------
 

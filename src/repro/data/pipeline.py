@@ -21,6 +21,7 @@ mid-training without draining the pipeline.
 
 from __future__ import annotations
 
+import copy
 import queue
 import threading
 from collections import deque
@@ -42,6 +43,14 @@ from repro.data.packing import (
     pack_documents,
     segment_id_batch,
 )
+
+
+class SnapshotUnavailable(RuntimeError):
+    """``state_dict`` cannot produce a replayable snapshot *right now*
+    (the boundary plan was re-emitted by an elastic resize, or the rewind
+    outran the retained window).  Transient by construction: the next
+    producer-drawn plan boundary is snapshotted again, so callers defer
+    the checkpoint one boundary instead of dying."""
 
 
 class BucketedLoader:
@@ -262,7 +271,22 @@ class ShardedBucketedLoader:
     the planner's worker count instead of mis-sharding or crashing).
     ``close()`` and ``resize()`` are mutually exclusive — a close during an
     in-flight resize can never observe a partially rebuilt fan-out.
+
+    **Resumable stream.** The producer snapshots its replayable state
+    (planner RNG + both loader RNG bit-generator states) *before* drawing
+    each plan, keyed by the plan's emitted sequence number.
+    :meth:`state_dict` returns the snapshot belonging to the next
+    *unconsumed* plan — so a loader rebuilt from it (``resume_state=`` or
+    :meth:`load_state_dict`) regenerates plan-for-plan and batch-for-batch
+    the exact stream the checkpointed run would have consumed next.
+    ``rewind=`` compensates for steps the trainer popped but had not yet
+    executed at checkpoint time (the H2D double-buffer).  Steps re-emitted
+    by an elastic resize carry no snapshot (they are merges of partially
+    delivered plans, not planner draws); checkpointing while those drain
+    raises, and becomes possible again at the next producer-drawn plan.
     """
+
+    _REWIND_MARGIN = 8  # consumed-plan snapshots retained for rewind
 
     def __init__(
         self,
@@ -279,6 +303,9 @@ class ShardedBucketedLoader:
         prefetch: int = 2,
         planner: StepPlanner | None = None,
         overlap: bool = False,
+        deterministic_refine: bool = False,
+        refine_rounds: int | None = None,
+        resume_state: dict | None = None,
     ):
         self.n_workers = n_workers
         self._owns_planner = planner is None
@@ -287,11 +314,12 @@ class ShardedBucketedLoader:
             # silently lose, so refuse them outright
             if (weights is not None or budget is not None
                     or budget_of is not None or load_of is not None
-                    or strategy is not None or overlap):
+                    or strategy is not None or overlap
+                    or deterministic_refine or refine_rounds is not None):
                 raise ValueError(
                     "pass either planner= or the plan-defining args "
-                    "(weights/budget/budget_of/load_of/strategy/overlap), "
-                    "not both"
+                    "(weights/budget/budget_of/load_of/strategy/overlap/"
+                    "deterministic_refine/refine_rounds), not both"
                 )
             if list(buckets) != planner.buckets:
                 raise ValueError(
@@ -319,6 +347,8 @@ class ShardedBucketedLoader:
                 strategy=strategy if strategy is not None else "lpt",
                 seed=seed,
                 overlap=overlap,
+                deterministic_refine=deterministic_refine,
+                refine_rounds=refine_rounds if refine_rounds is not None else 16,
             )
         self._make_batch = make_batch
         self._rng = np.random.default_rng(seed + 1)
@@ -351,8 +381,21 @@ class ShardedBucketedLoader:
         # plans whose background knapsack refinement was adopted at the
         # push boundary (overlap telemetry; guarded by _cv)
         self._refined_adopted = 0
+        # per-seq replayable snapshots captured before each plan's draw,
+        # and an epoch counter so load_state_dict can invalidate a plan
+        # the producer drew from pre-restore RNG state (guarded by _cv)
+        self._snapshots: dict[int, dict] = {}
+        self._epoch = 0
+        # serializes the producer's draw+materialize (which consume the
+        # replayable RNG streams) against load_state_dict resetting them:
+        # a restore landing mid-draw would otherwise leave the restored
+        # stream already partially consumed.  Never held across the
+        # backpressure wait (that would deadlock the restoring consumer).
+        self._draw_lock = threading.Lock()
         self._stop = threading.Event()
         self._error: Exception | None = None
+        if resume_state is not None:
+            self._apply_state(resume_state)
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
@@ -478,22 +521,47 @@ class ShardedBucketedLoader:
         for w, share in enumerate(per_rank):
             queues[w].append((seq, share))
 
+    def _capture_snapshot(self) -> dict:
+        """Replayable producer state, captured BEFORE a plan's draw: a
+        loader restored from it regenerates that plan (and its batches)
+        and every one after it."""
+        return {
+            "planner": self._planner.state_dict(),
+            "rng": copy.deepcopy(self._rng.bit_generator.state),
+            "repack_rng": copy.deepcopy(self._repack_rng.bit_generator.state),
+        }
+
+    def _prune_snapshots_locked(self) -> None:
+        """Drop snapshots too old for any rewind (``self._cv`` held)."""
+        heads = [d[0][0] for d in self._pending if d]
+        floor = (min(heads) if heads else self._seq) - self._REWIND_MARGIN
+        for seq in [s for s in self._snapshots if s < floor]:
+            del self._snapshots[seq]
+
     def _worker(self) -> None:
         try:
             while not self._stop.is_set():
-                plan, ticket = self._planner.plan_async()
-                batches = self._materialize(plan)
+                with self._draw_lock:
+                    with self._cv:
+                        epoch = self._epoch
+                    snap = self._capture_snapshot()
+                    plan, ticket = self._planner.plan_async()
+                    batches = self._materialize(plan)
                 with self._cv:
                     # backpressure on the DEEPEST rank queue: like the old
                     # per-rank bounded queues, one stalled consumer caps the
                     # whole pipeline at ``prefetch`` steps of memory instead
                     # of letting its backlog grow without bound
-                    while not self._stop.is_set() and (
+                    while not self._stop.is_set() and self._epoch == epoch and (
                         max(len(d) for d in self._pending) >= self._prefetch
                     ):
                         self._cv.wait(0.1)
                     if self._stop.is_set():
                         return
+                    if self._epoch != epoch:
+                        # load_state_dict restored the RNGs after this plan
+                        # was drawn: it belongs to the abandoned stream
+                        continue
                     if ticket is not None:
                         # the push boundary: the refiner had the whole
                         # materialize + backpressure window (i.e. the
@@ -523,8 +591,15 @@ class ShardedBucketedLoader:
                         per_rank = self._repack(items, target)
                         self._carry = []
                         plan = self._emitted_plan(per_rank)
+                        # the pushed step is a merge of partially delivered
+                        # plans — not a planner draw; it has no snapshot
+                        snap = None
                     self._plans.append(plan)
+                    seq = self._seq
                     self._push_locked(self._pending, per_rank)
+                    if snap is not None:
+                        self._snapshots[seq] = snap
+                    self._prune_snapshots_locked()
                     self._cv.notify_all()
         except Exception as e:  # noqa: BLE001 — surface to the consumer
             self._error = e
@@ -585,6 +660,82 @@ class ShardedBucketedLoader:
             except StopIteration:  # PEP 479: end the generator explicitly
                 return
             yield step
+
+    # -- run-state checkpointing ----------------------------------------------
+
+    def state_dict(self, *, rewind: int = 0) -> dict:
+        """Replayable state for the next *unconsumed* plan (minus ``rewind``).
+
+        ``rewind=k`` returns the snapshot ``k`` plans earlier than the
+        current queue head — for a trainer that already popped ``k`` steps
+        it has not yet executed (the prefetch double-buffer), so the resumed
+        run regenerates those steps too.  If the queues are momentarily
+        empty the call waits for the producer's next push (it never blocks
+        a healthy pipeline for long: empty queues mean the producer has
+        space).  Raises if the boundary plan was re-emitted by an elastic
+        resize (no planner draw to replay) or the rewind outran the
+        retained snapshot window."""
+        if rewind < 0:
+            raise ValueError("rewind must be >= 0")
+        with self._cv:
+            while True:
+                self._check_error()
+                if self._stop.is_set():
+                    raise RuntimeError("cannot checkpoint a closed loader")
+                heads = [d[0][0] for d in self._pending if d]
+                if heads:
+                    seq = min(heads) - rewind
+                    snap = self._snapshots.get(seq)
+                    if snap is None:
+                        raise SnapshotUnavailable(
+                            f"no replayable snapshot for plan seq {seq}: "
+                            f"either an elastic resize re-emitted it or "
+                            f"rewind={rewind} outran the retained window — "
+                            f"checkpoint again at the next plan boundary"
+                        )
+                    return {"version": 1, "seq": seq, **copy.deepcopy(snap)}
+                self._cv.wait(0.1)
+
+    def _apply_state(self, sd: dict) -> None:
+        """Install a :meth:`state_dict` snapshot (constructor path: the
+        producer thread has not started, no locking needed)."""
+        if int(sd["planner"]["n_workers"]) != self.n_workers:
+            raise ValueError(
+                f"resume state was captured for "
+                f"{sd['planner']['n_workers']} workers, loader built for "
+                f"{self.n_workers}"
+            )
+        self._planner.load_state_dict(sd["planner"])
+        self._rng.bit_generator.state = sd["rng"]
+        self._repack_rng.bit_generator.state = sd["repack_rng"]
+        self._seq = int(sd.get("seq", 0))
+
+    def load_state_dict(self, sd: dict) -> None:
+        """Rewind a LIVE loader to a snapshot: pending plans are discarded,
+        RNG streams restored, and the producer regenerates the stream from
+        the snapshot's plan onward (a plan it drew from pre-restore state
+        is invalidated by the epoch bump, never delivered; the draw lock
+        keeps the reset from landing mid-draw, which would leave the
+        restored streams partially consumed)."""
+        with self._draw_lock, self._cv:
+            if self._stop.is_set():
+                raise RuntimeError("cannot restore a closed loader")
+            self._epoch += 1
+            for d in self._pending:
+                d.clear()
+            self._snapshots.clear()
+            self._carry = []
+            self._plans.clear()
+            self._refined_adopted = 0
+            n = int(sd["planner"]["n_workers"])
+            if n != len(self._pending):
+                self._pending = [deque() for _ in range(n)]
+            self.n_workers = n
+            self._planner.load_state_dict(sd["planner"])
+            self._rng.bit_generator.state = sd["rng"]
+            self._repack_rng.bit_generator.state = sd["repack_rng"]
+            self._seq = int(sd.get("seq", 0))
+            self._cv.notify_all()
 
     # -- elasticity -----------------------------------------------------------
 

@@ -22,6 +22,16 @@ from typing import Callable
 
 from repro.checkpoint import store
 
+# run_state may be the blob itself or a thunk producing it: assembling the
+# blob (loader snapshot, scheduler state, RNG serialization) costs real work
+# per call, and the cadence only *sometimes* saves — a thunk defers that
+# work to the saves that actually happen
+RunState = dict | Callable[[], dict] | None
+
+
+def _resolve(run_state: RunState) -> dict | None:
+    return run_state() if callable(run_state) else run_state
+
 
 @dataclasses.dataclass
 class CheckpointCadence:
@@ -43,27 +53,51 @@ class WorkerHealth:
 
 
 class HeartbeatMonitor:
-    """Tracks liveness; a worker silent for ``timeout_s`` is declared dead."""
+    """Tracks liveness; a worker silent for ``timeout_s`` is declared dead.
+
+    ``mark_dead`` force-declares a worker dead regardless of heartbeats —
+    the injection point for chaos tests and for external failure signals
+    (a cluster manager that *knows* a node is gone should not wait out the
+    timeout).  A forced-dead worker stays dead through later heartbeats
+    (a zombie's packets must not resurrect it) until ``reset``."""
 
     def __init__(self, n_workers: int, timeout_s: float = 60.0):
         now = time.time()
         self.workers = {w: WorkerHealth(now) for w in range(n_workers)}
         self.timeout_s = timeout_s
+        self._forced_dead: set[int] = set()
 
     def heartbeat(self, worker: int, t: float | None = None) -> None:
-        self.workers.setdefault(worker, WorkerHealth(0.0)).last_heartbeat = (
-            t if t is not None else time.time()
-        )
+        # unknown ranks are IGNORED, not auto-registered: after an elastic
+        # resize the trainer may still drain one stale wider fan-out, and
+        # its heartbeats must not re-add ranks the recovery just removed
+        # (they would time out later and fire a spurious second failure)
+        h = self.workers.get(worker)
+        if h is None:
+            return
+        h.last_heartbeat = t if t is not None else time.time()
+
+    def mark_dead(self, worker: int) -> None:
+        self._forced_dead.add(worker)
+        self.workers.setdefault(worker, WorkerHealth(0.0))
 
     def dead_workers(self, now: float | None = None) -> list[int]:
         now = now if now is not None else time.time()
         return sorted(
             w for w, h in self.workers.items()
-            if now - h.last_heartbeat > self.timeout_s
+            if w in self._forced_dead or now - h.last_heartbeat > self.timeout_s
         )
 
     def alive(self, now: float | None = None) -> int:
         return len(self.workers) - len(self.dead_workers(now))
+
+    def reset(self, n_workers: int) -> None:
+        """Re-arm for a recovered mesh: ranks are renumbered ``0..n-1`` by
+        the elastic resize, so stale identities (and forced-dead flags)
+        would misfire against the new numbering."""
+        now = time.time()
+        self.workers = {w: WorkerHealth(now) for w in range(n_workers)}
+        self._forced_dead.clear()
 
 
 def recovery_plan(n_alive: int, *, model_parallel: int = 16) -> dict:
@@ -88,31 +122,88 @@ def recovery_plan(n_alive: int, *, model_parallel: int = 16) -> dict:
 @dataclasses.dataclass
 class FaultTolerantRunner:
     """Orchestration shim tying the pieces together for the train loop:
-    periodic saves, dead-worker detection, elastic replan callback."""
+    periodic saves (full run state riding the manifest), dead-worker
+    detection, emergency save + elastic replan on failure."""
 
     ckpt_dir: str
     cadence: CheckpointCadence
     monitor: HeartbeatMonitor
     on_resize: Callable[[int], None] | None = None  # new dp size
-    _last_saved_step: int = -1
+    keep: int = 3  # retention: newest K checkpoints survive
+    model_parallel: int = 1  # TP/EP degree recovery must keep intact
+    _last_saved_step: int = 0
+    # dead sets already emergency-saved/reported: a failure that CANNOT be
+    # recovered (infeasible plan, no resize hook) persists in the monitor,
+    # and re-saving the full model state every subsequent step would turn
+    # one failure into a per-step multi-GB write
+    _handled_dead: frozenset = dataclasses.field(default=frozenset())
 
-    def maybe_checkpoint(self, state, step: int, step_time_s: float) -> bool:
+    def note_restored(self, step: int) -> None:
+        """Tell a fresh runner the run resumed from ``step``: the cadence
+        counts from there instead of writing a redundant checkpoint on the
+        first post-restore step (the restored checkpoint IS step's save)."""
+        self._last_saved_step = max(self._last_saved_step, step)
+
+    def maybe_checkpoint(
+        self, state, step: int, step_time_s: float, *, run_state: RunState = None
+    ) -> bool:
         interval = self.cadence.interval_steps(step_time_s)
         if step - self._last_saved_step >= interval:
-            store.save(state, step, self.ckpt_dir)
+            store.save(
+                state, step, self.ckpt_dir,
+                keep=self.keep, run_state=_resolve(run_state),
+            )
             self._last_saved_step = step
             return True
         return False
 
-    def emergency_checkpoint(self, state, step: int) -> None:
-        store.save(state, step, self.ckpt_dir)
+    def emergency_checkpoint(
+        self, state, step: int, *, run_state: RunState = None
+    ) -> None:
+        store.save(
+            state, step, self.ckpt_dir,
+            keep=self.keep, run_state=_resolve(run_state),
+        )
         self._last_saved_step = step
 
-    def check_failures(self, model_parallel: int = 16) -> dict | None:
+    def check_failures(self, model_parallel: int | None = None) -> dict | None:
+        """Detection + resize callback only (no checkpoint) — kept for
+        callers that manage their own saves; the trainer path is
+        :meth:`handle_failures`.  NOTE: ``model_parallel`` now defaults to
+        the runner's ``model_parallel`` field (1 for DP-only runs), not
+        the old hardcoded 16 — pass it explicitly to pin a TP/EP degree."""
         dead = self.monitor.dead_workers()
         if not dead:
             return None
-        plan = recovery_plan(self.monitor.alive(), model_parallel=model_parallel)
+        mp = model_parallel if model_parallel is not None else self.model_parallel
+        plan = recovery_plan(self.monitor.alive(), model_parallel=mp)
         if plan.get("feasible") and self.on_resize is not None:
             self.on_resize(plan["data_parallel"])
+            self.monitor.reset(plan["used_workers"])
+        return {"dead": dead, "plan": plan}
+
+    def handle_failures(
+        self, state, step: int, *, run_state: RunState = None
+    ) -> dict | None:
+        """The full recovery sequence the paper's failure model demands:
+        detect -> emergency-save (the survivors' state is about to be
+        re-sharded; persist it first) -> pick the largest usable mesh ->
+        ``on_resize`` (loader/scheduler replan) -> re-arm the monitor for
+        the renumbered ranks.  Returns ``None`` when everyone is alive or
+        the current dead set was already handled (an unrecoverable failure
+        persists in the monitor; it must not re-trigger a full-state
+        emergency save every subsequent step)."""
+        dead = self.monitor.dead_workers()
+        if not dead or frozenset(dead) == self._handled_dead:
+            return None
+        self.emergency_checkpoint(state, step, run_state=run_state)
+        plan = recovery_plan(
+            self.monitor.alive(), model_parallel=self.model_parallel
+        )
+        if plan.get("feasible") and self.on_resize is not None:
+            self.on_resize(plan["data_parallel"])
+            self.monitor.reset(plan["used_workers"])
+            self._handled_dead = frozenset()  # fresh mesh, fresh slate
+        else:
+            self._handled_dead = frozenset(dead)
         return {"dead": dead, "plan": plan}

@@ -5,11 +5,20 @@ production config when pointed at a real mesh:
 
     PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
         --smoke --steps 50 --batch 8 --seq 256
+
+**Resume.**  ``--steps`` is the TOTAL step count of the run; ``--resume``
+restores the latest checkpoint under ``--ckpt-dir`` — weights AND the
+run-state blob (trainer RNG, loader/planner RNG streams, next step) — and
+trains the remaining steps.  A killed-and-resumed run therefore emits
+byte-identical plan digests and matching parameters versus the
+uninterrupted run; ``--digest-log`` appends each consumed plan's digest to
+a file so CI can ``cmp`` the two streams.
 """
 
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -26,7 +35,7 @@ from repro.distributed.fault_tolerance import (
 )
 from repro.launch.mesh import make_data_mesh
 from repro.optim.adamw import OptimizerConfig
-from repro.train.loop import Trainer
+from repro.train.loop import Trainer, deserialize_rng_key
 from repro.train.steps import init_state
 from repro.checkpoint import store
 
@@ -35,11 +44,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
-    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--steps", type=int, default=30,
+                    help="TOTAL steps for the run (a resumed run trains "
+                         "steps..--steps from the checkpoint)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore weights + full run state (plan stream, "
+                         "RNGs) from the latest checkpoint")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoint retention: newest K survive")
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="min steps between periodic checkpoints")
+    ap.add_argument("--digest-log", default=None, metavar="PATH",
+                    help="append each consumed plan's sha256 digest (one "
+                         "hex line per step; resume-parity evidence)")
     ap.add_argument("--adaptive", action="store_true",
                     help="bucketed AdaptiveLoad data (variable shapes)")
     ap.add_argument("--workers", type=int, default=1,
@@ -55,6 +75,13 @@ def main() -> None:
                     help="overlapped execution: knapsack-swap plan "
                          "refinement runs behind the previous step's "
                          "compute (requires --dispatch knapsack)")
+    ap.add_argument("--deterministic-refine", action="store_true",
+                    help="fixed-round digest-seeded refinement: adoption "
+                         "is a pure function of the plan, so overlapped "
+                         "runs stay resumable and multi-host safe "
+                         "(requires --overlap)")
+    ap.add_argument("--refine-rounds", type=int, default=16,
+                    help="exchange rounds for --deterministic-refine")
     args = ap.parse_args()
     if args.workers > 1 and not args.adaptive:
         ap.error("--workers > 1 requires --adaptive (the fixed-shape stream "
@@ -67,6 +94,13 @@ def main() -> None:
     if args.overlap and not (args.mesh or args.workers > 1):
         ap.error("--overlap requires the planner-driven stream "
                  "(--workers > 1 or --mesh)")
+    if args.deterministic_refine and not args.overlap:
+        ap.error("--deterministic-refine configures the overlapped refiner; "
+                 "pass --overlap (the synchronous knapsack pass is already "
+                 "deterministic)")
+    if args.resume and args.overlap and not args.deterministic_refine:
+        ap.error("--resume with --overlap needs --deterministic-refine: "
+                 "wall-clock adoption makes the plan stream unreplayable")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -77,12 +111,21 @@ def main() -> None:
 
     state = init_state(jax.random.PRNGKey(0), cfg, opt)
     start = 0
+    run_state = None
     if args.resume:
         latest = store.latest_step(args.ckpt_dir)
         if latest is not None:
             state = store.restore(args.ckpt_dir, state)
-            start = latest
-            print(f"resumed from step {latest}")
+            run_state = store.load_run_state(args.ckpt_dir)
+            start = run_state["step"] if run_state is not None else latest
+            print(f"resumed from step {start}"
+                  + ("" if run_state else " (weights-only checkpoint: "
+                     "fresh run state)"))
+    n_run = args.steps - start
+    if n_run <= 0:
+        print(f"nothing to do: checkpoint already at step {start} "
+              f">= --steps {args.steps}")
+        return
 
     rng = np.random.default_rng(0)
 
@@ -118,6 +161,9 @@ def main() -> None:
                 load_of=lambda b: b.load(policy.p),
                 strategy=args.dispatch,
                 overlap=args.overlap,
+                deterministic_refine=args.deterministic_refine,
+                refine_rounds=args.refine_rounds,
+                resume_state=(run_state or {}).get("loader"),
             )
         else:
             loader = BucketedLoader(
@@ -139,23 +185,52 @@ def main() -> None:
 
         data_iter = iter(_Fixed())
 
+    def run_state_of(held: int) -> dict:
+        if isinstance(loader, ShardedBucketedLoader):
+            return {"loader": loader.state_dict(rewind=held)}
+        return {}
+
     ft = FaultTolerantRunner(
         ckpt_dir=args.ckpt_dir,
-        cadence=CheckpointCadence(ckpt_cost_s=0.5, mtbf_s=3600.0, min_interval_steps=10),
-        monitor=HeartbeatMonitor(n_workers=1, timeout_s=1e9),
+        cadence=CheckpointCadence(ckpt_cost_s=0.5, mtbf_s=3600.0,
+                                  min_interval_steps=args.ckpt_every),
+        monitor=HeartbeatMonitor(n_workers=args.workers, timeout_s=1e9),
+        keep=args.keep,
     )
     mesh = make_data_mesh(args.workers) if args.mesh else None
-    trainer = Trainer(cfg, opt, ft=ft, mesh=mesh)
-    state, hist = trainer.run(
-        state, data_iter, args.steps, rng=jax.random.PRNGKey(1), log_every=10
+    trainer = Trainer(cfg, opt, ft=ft, mesh=mesh, run_state_of=run_state_of)
+    trainer_rng = (
+        deserialize_rng_key(run_state["trainer"]["rng"])
+        if run_state is not None else jax.random.PRNGKey(1)
     )
+    state, hist = trainer.run(
+        state, data_iter, n_run, rng=trainer_rng, start_step=start,
+        log_every=10,
+    )
+    if args.digest_log and isinstance(loader, ShardedBucketedLoader):
+        # the consumed prefix of the emitted plan stream, one step per line
+        # (the producer runs ahead by the prefetch depth; those plans
+        # belong to the NEXT run segment)
+        # append only when the run ACTUALLY resumed mid-stream — a
+        # --resume with no checkpoint found starts at step 0 and must
+        # truncate, or stale digests from an earlier attempt poison the
+        # parity comparison
+        with open(args.digest_log, "a" if start > 0 else "w") as f:
+            for p in loader.plans[:n_run]:
+                f.write(p.digest().hex() + "\n")
+        print(f"plan digests for steps {start}..{start + n_run - 1} -> "
+              f"{args.digest_log}")
     if buckets is not None:
         loader.close()
     print(
-        f"done: {args.steps} steps, final loss {hist.losses[-1]:.4f}, "
+        f"done: {n_run} steps ({start}..{args.steps - 1}), "
+        f"final loss {hist.losses[-1]:.4f}, "
         f"throughput {hist.throughput:,.0f} tok/s, events={hist.events}"
     )
-    store.save(state, start + args.steps, args.ckpt_dir)
+    store.save(state, args.steps, args.ckpt_dir, keep=args.keep,
+               run_state=trainer.last_run_state)
+    print(f"checkpoint (weights + run state) at step {args.steps} -> "
+          f"{Path(args.ckpt_dir)}")
 
 
 if __name__ == "__main__":

@@ -84,6 +84,13 @@ class ExecutionEngine:
         on the backend's timing observers)."""
         return []
 
+    def heartbeat_ranks(self) -> list[int]:
+        """Ranks that demonstrably completed work in the last executed
+        step — what the trainer feeds the fault-tolerance heartbeat
+        monitor each step.  Default: every rank of the last fan-out (an
+        engine whose collective completed heard from all of them)."""
+        return list(getattr(self, "_last_ranks", []))
+
 
 class EmulatedEngine(ExecutionEngine):
     """Single-host emulation: every DP rank's microbatches run serially on
@@ -151,6 +158,7 @@ class EmulatedEngine(ExecutionEngine):
 
     def execute_step(self, state, worker_steps, *, step_key, step):
         self._records = []
+        self._last_ranks = list(range(len(worker_steps)))
         compiled = False
         acc = None
         loss_sum = None
@@ -258,6 +266,7 @@ class MeshEngine(ExecutionEngine):
         self.executor.stage(worker_steps)
 
     def execute_step(self, state, worker_steps, *, step_key, step):
+        self._last_ranks = list(range(len(worker_steps)))
         digests = None
         if self._check_agreement:
             # single-process: every rank's digest derives from the same

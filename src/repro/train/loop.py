@@ -30,6 +30,20 @@ engines; a first-compile step is recorded as a ``compile@i`` event and
 excluded from ``TrainHistory.throughput`` (mirroring the telemetry
 exclusion), so a shape mix costs one compile per bucket and never skews
 reported throughput.
+
+**Fault tolerance & resume.**  With ``ft=`` attached the driver runs the
+full closed loop behind the engine interface: every step it (1) heartbeats
+the engine's completed ranks into the monitor, (2) offers the cadence a
+checkpoint — the save carries a *run-state* blob (trainer RNG key + next
+step, plus whatever ``run_state_of`` contributes: loader snapshot,
+scheduler state) in the manifest so weights and plan-stream state commit
+atomically, and (3) on dead ranks performs emergency-save ->
+``recovery_plan`` -> ``on_resize`` (elastic loader/scheduler shrink) and
+keeps training on the surviving mesh.  ``Trainer.run(start_step=,
+rng=)`` resumes the step numbering and RNG stream exactly, so a
+killed-and-resumed run replays byte-identical plan digests and matching
+parameters versus the uninterrupted run (``tests/test_resume.py`` pins
+this for both engines).
 """
 
 from __future__ import annotations
@@ -39,12 +53,30 @@ import time
 from typing import Any, Callable, Mapping
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.scheduler import AdaptiveLoadScheduler
+from repro.data.pipeline import SnapshotUnavailable
 from repro.distributed.fault_tolerance import FaultTolerantRunner
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig
 from repro.train.engine import EmulatedEngine, ExecutionEngine, MeshEngine
+
+RUN_STATE_VERSION = 1
+
+
+def serialize_rng_key(key) -> list[int]:
+    """A jax PRNG key as JSON-serializable uint32 words (typed keys are
+    stored as their key data; the default raw uint32 keys round-trip
+    bit-exactly, which is what resume parity needs)."""
+    if hasattr(key, "dtype") and jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
+    return np.asarray(jax.device_get(key), dtype=np.uint32).tolist()
+
+
+def deserialize_rng_key(words) -> jax.Array:
+    return jnp.asarray(np.asarray(words, dtype=np.uint32))
 
 
 @dataclasses.dataclass
@@ -84,12 +116,22 @@ class Trainer:
         measure_ranks: bool | str | None = None,
         check_agreement: bool = False,
         engine: ExecutionEngine | None = None,
+        run_state_of: Callable[[int], dict] | None = None,
     ):
         self.cfg = cfg
         self.opt = opt
         self.policy = policy
         self.scheduler = scheduler
         self.ft = ft
+        # run_state_of(held) -> dict merged into every checkpoint's
+        # run-state blob.  ``held`` is how many data items the driver has
+        # popped but not yet executed (the prefetch double-buffer) — a
+        # loader snapshot must rewind by that many plans so the resumed
+        # run regenerates them.
+        self.run_state_of = run_state_of
+        #: run-state blob as of the END of the last completed ``run`` —
+        #: what a launcher persists with its final checkpoint
+        self.last_run_state: dict | None = None
         if engine is not None:
             if mesh is not None:
                 raise ValueError("pass engine= or mesh=, not both")
@@ -124,6 +166,32 @@ class Trainer:
             return step
         return [step]
 
+    def _run_state(self, next_step: int, rng, held: int) -> dict:
+        """The resumable run-state blob for a checkpoint taken between
+        step ``next_step - 1`` and ``next_step``."""
+        rs = {
+            "version": RUN_STATE_VERSION,
+            "step": int(next_step),
+            "trainer": {"rng": serialize_rng_key(rng)},
+        }
+        if self.run_state_of is not None:
+            rs.update(self.run_state_of(held) or {})
+        return rs
+
+    def _failure_run_state(self, next_step: int, rng, held: int) -> dict:
+        """Run state for an EMERGENCY save: if the loader cannot snapshot
+        right now (resize in flight), degrade to weights + trainer RNG
+        rather than losing the save — an imminent crash makes a partial
+        run state strictly better than none."""
+        try:
+            return self._run_state(next_step, rng, held)
+        except SnapshotUnavailable:
+            return {
+                "version": RUN_STATE_VERSION,
+                "step": int(next_step),
+                "trainer": {"rng": serialize_rng_key(rng)},
+            }
+
     def run(
         self,
         state,
@@ -131,15 +199,26 @@ class Trainer:
         n_steps: int,
         *,
         rng=None,
+        start_step: int = 0,
         log_every: int = 50,
         on_metrics: Callable[[int, dict], None] | None = None,
     ):
+        """Drive ``n_steps`` optimizer steps ``start_step..start_step +
+        n_steps - 1``.  A resumed run passes the checkpoint's ``step`` as
+        ``start_step`` and its restored trainer RNG as ``rng`` — the step
+        numbering, RNG stream, and (via the loader's restored plan stream)
+        the dispatched plans continue exactly where the save left off."""
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         hist = TrainHistory()
         engine = self.engine
+        if self.ft is not None and start_step > 0:
+            # the restored checkpoint IS start_step's save: count the
+            # cadence from there instead of re-saving on the first step
+            self.ft.note_restored(start_step)
         state = engine.place_state(state)
         item = next(data_iter) if n_steps > 0 else None
         for i in range(n_steps):
+            step_no = start_step + i
             worker_steps = self._as_worker_steps(item)
             t0 = time.perf_counter()
             tok = sum(
@@ -148,43 +227,78 @@ class Trainer:
             n_micro = sum(len(ws) for ws in worker_steps)
             rng, sub = jax.random.split(rng)
             state, out = engine.execute_step(
-                state, worker_steps, step_key=sub, step=i
+                state, worker_steps, step_key=sub, step=step_no
             )
+            held = 0
             if engine.async_dispatch and i + 1 < n_steps:
                 # devices are still computing step i: fetch step i+1 and
                 # stage its H2D transfers behind that compute
                 item = next(data_iter)
                 engine.prepare(self._as_worker_steps(item))
+                held = 1
             recs = engine.timing_records()
             jax.block_until_ready(state["step"])
             dt = time.perf_counter() - t0
             loss = float(out.loss)
-            if not engine.async_dispatch and i + 1 < n_steps:
-                item = next(data_iter)
 
             hist.losses.append(loss)
             hist.step_times.append(dt)
             hist.tokens.append(tok)
             if out.compiled:
                 hist.compile_steps.append(i)
-                hist.events.append(f"compile@{i}")
+                hist.events.append(f"compile@{step_no}")
 
             if self.scheduler is not None:
                 self.scheduler.observe(recs)
 
             if self.ft is not None:
-                if self.ft.maybe_checkpoint(state, i, dt):
-                    hist.events.append(f"ckpt@{i}")
-                failure = self.ft.check_failures()
+                # heartbeat BEFORE failure checks: a rank that completed
+                # this step is alive, whatever the wall clock says
+                for w in engine.heartbeat_ranks():
+                    self.ft.monitor.heartbeat(w)
+                # run_state is a thunk: the snapshot work (loader rewind,
+                # RNG serialization) only happens on steps that save.
+                # ``step_no + 1`` = steps completed = the step a resume
+                # starts from; ``held`` rewinds the loader snapshot past
+                # the item the double-buffer already popped.
+                run_state = lambda: self._run_state(step_no + 1, rng, held)  # noqa: B023,E731
+                try:
+                    if self.ft.maybe_checkpoint(
+                        state, step_no + 1, dt, run_state=run_state
+                    ):
+                        hist.events.append(f"ckpt@{step_no}")
+                except SnapshotUnavailable:
+                    # a resize re-emitted the boundary plan: no replayable
+                    # snapshot THIS step.  Transient — the cadence check
+                    # re-fires next step, where a fresh draw is snapshotted
+                    hist.events.append(f"ckpt-deferred@{step_no}")
+                failure = self.ft.handle_failures(
+                    state, step_no + 1,
+                    run_state=lambda: self._failure_run_state(  # noqa: B023
+                        step_no + 1, rng, held
+                    ),
+                )
                 if failure is not None:
-                    hist.events.append(f"failure@{i}:{failure['plan']}")
+                    hist.events.append(f"failure@{step_no}:{failure['plan']}")
+
+            if not engine.async_dispatch and i + 1 < n_steps:
+                # sync engines fetch AFTER the fault-tolerance block: the
+                # checkpoint then sits exactly on a plan boundary (nothing
+                # popped-but-unexecuted to rewind)
+                item = next(data_iter)
 
             if on_metrics is not None:
-                on_metrics(i, {"loss": loss, "time": dt, "tokens": tok})
+                on_metrics(step_no, {"loss": loss, "time": dt, "tokens": tok})
             if log_every and i % log_every == 0:
                 print(
-                    f"step {i:5d}  loss {loss:.4f}  "
+                    f"step {step_no:5d}  loss {loss:.4f}  "
                     f"{tok/dt:,.0f} tok/s  ({n_micro} microbatches, "
                     f"{len(worker_steps)} ranks)"
                 )
+        # degraded variant: an end-of-run loader that cannot snapshot
+        # (e.g. a resize still draining) must not crash a finished run —
+        # the launcher then persists weights + trainer RNG
+        self.last_run_state = self._failure_run_state(
+            start_step + n_steps, rng, 0
+        )
         return state, hist

@@ -1,0 +1,200 @@
+"""Checkpoint store + recovery-plan coverage (fault-tolerance substrate).
+
+The store is the thing a multi-day run bets on: bf16 bit-exactness,
+retention, crash-debris sweeping, run-state blobs, and the sharding
+contract of ``restore`` each get pinned here, along with the power-of-two
+DP shrink edge cases of ``recovery_plan``.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint import store  # noqa: E402
+from repro.distributed.fault_tolerance import (  # noqa: E402
+    CheckpointCadence,
+    FaultTolerantRunner,
+    HeartbeatMonitor,
+    recovery_plan,
+)
+
+
+class TestStore:
+    def test_bf16_uint16_bits_roundtrip(self, tmp_path):
+        """npz can't hold bf16: leaves are stored as raw uint16 bits and
+        must come back BIT-exact (any float detour would quietly round)."""
+        x = jnp.asarray(
+            np.linspace(-3.0, 3.0, 64, dtype=np.float32)
+        ).astype(jnp.bfloat16)
+        state = {"w": x, "scalar": jnp.bfloat16(1.5)}
+        store.save(state, 1, tmp_path)
+        manifest = json.loads(
+            (tmp_path / "step-000000001" / "manifest.json").read_text()
+        )
+        assert manifest["leaves"]["w"]["stored"] == "uint16_bits"
+        restored = store.restore(tmp_path, jax.eval_shape(lambda: state))
+        assert restored["w"].dtype == jnp.bfloat16
+        assert np.array_equal(
+            np.asarray(restored["w"]).view(np.uint16),
+            np.asarray(x).view(np.uint16),
+        )
+
+    def test_retention_keeps_newest_k(self, tmp_path):
+        state = {"w": jnp.zeros((2,))}
+        for s in range(1, 6):
+            store.save(state, s, tmp_path, keep=2)
+        kept = sorted(p.name for p in tmp_path.glob("step-*"))
+        assert kept == ["step-000000004", "step-000000005"]
+        assert store.latest_step(tmp_path) == 5
+
+    def test_restore_mismatch_errors(self, tmp_path):
+        store.save({"a": jnp.zeros((2,)), "b": jnp.ones((3,))}, 1, tmp_path)
+        with pytest.raises(ValueError, match="mismatch"):
+            store.restore(tmp_path, {"a": jnp.zeros((2,))})  # missing leaf
+        with pytest.raises(ValueError, match="mismatch"):
+            store.restore(
+                tmp_path,
+                {"a": jnp.zeros((2,)), "b": jnp.ones((3,)), "c": jnp.ones(())},
+            )
+        with pytest.raises(ValueError, match="shape"):
+            store.restore(tmp_path, {"a": jnp.zeros((5,)), "b": jnp.ones((3,))})
+
+    def test_stale_tmp_swept_but_live_writes_spared(self, tmp_path):
+        """OLD crash debris (tmp-* directories) must not survive the next
+        save or the restart-path latest_step scan — but a FRESH tmp dir is
+        a live concurrent write and must be left alone."""
+        import os
+        import time
+
+        old = time.time() - 2 * store.TMP_SWEEP_MIN_AGE_S
+        (tmp_path / "tmp-3").mkdir(parents=True)
+        (tmp_path / "tmp-3" / "arrays.npz").write_bytes(b"partial garbage")
+        os.utime(tmp_path / "tmp-3", (old, old))
+        store.save({"w": jnp.zeros((1,))}, 4, tmp_path)
+        assert not list(tmp_path.glob("tmp-*"))
+        (tmp_path / "tmp-9").mkdir()
+        os.utime(tmp_path / "tmp-9", (old, old))
+        (tmp_path / "tmp-11").mkdir()  # fresh: a concurrent writer's
+        assert store.latest_step(tmp_path) == 4
+        assert [p.name for p in tmp_path.glob("tmp-*")] == ["tmp-11"]
+
+    def test_run_state_roundtrip_and_weights_only_compat(self, tmp_path):
+        state = {"w": jnp.arange(4.0)}
+        rs = {"step": 7, "trainer": {"rng": [0, 7]}, "loader": {"seq": 7}}
+        store.save(state, 7, tmp_path, run_state=rs)
+        assert store.load_run_state(tmp_path) == rs
+        restored = store.restore(tmp_path, jax.eval_shape(lambda: state))
+        assert np.array_equal(restored["w"], state["w"])
+        # weights-only checkpoint (no run_state): loaders fall back cleanly
+        store.save(state, 8, tmp_path)
+        assert store.load_run_state(tmp_path) is None
+        assert store.load_run_state(tmp_path, step=7) == rs
+
+    def test_v1_manifest_restores(self, tmp_path):
+        """Backward compat: a pre-run_state manifest (no version field)
+        restores and reports no run state."""
+        state = {"w": jnp.arange(3.0)}
+        final = store.save(state, 2, tmp_path)
+        manifest = json.loads((final / "manifest.json").read_text())
+        del manifest["version"]
+        (final / "manifest.json").write_text(json.dumps(manifest))
+        assert store.load_run_state(tmp_path) is None
+        restored = store.restore(tmp_path, jax.eval_shape(lambda: state))
+        assert np.array_equal(restored["w"], state["w"])
+
+    def test_restore_honors_like_shardings(self, tmp_path):
+        """The docstring's contract: a ``like`` leaf carrying a sharding is
+        device_put onto it (the restoring job's mesh decides placement)."""
+        if jax.device_count() < 2:
+            pytest.skip("needs >= 2 (virtual) devices")
+        state = {"w": jnp.arange(8.0), "b": jnp.zeros((4,))}
+        store.save(state, 1, tmp_path)
+        dev = jax.devices()[1]
+        sharding = jax.sharding.SingleDeviceSharding(dev)
+        like = {
+            "w": jax.device_put(jnp.zeros((8,)), sharding),
+            "b": jax.ShapeDtypeStruct((4,), jnp.float32),
+        }
+        restored = store.restore(tmp_path, like)
+        assert restored["w"].sharding == sharding
+        assert list(restored["w"].devices()) == [dev]
+        assert np.array_equal(np.asarray(restored["w"]), np.arange(8.0))
+
+
+class TestRecoveryPlan:
+    def test_exact_fit(self):
+        plan = recovery_plan(32, model_parallel=16)
+        assert plan == {
+            "feasible": True, "data_parallel": 2, "model_parallel": 16,
+            "used_workers": 32, "spare_workers": 0,
+        }
+
+    def test_fewer_survivors_than_one_model_group(self):
+        plan = recovery_plan(15, model_parallel=16)
+        assert plan["feasible"] is False
+        assert "fewer survivors" in plan["reason"]
+
+    def test_power_of_two_shrink(self):
+        # 3 full groups alive -> dp rounds DOWN to 2 (partial DP groups
+        # can't run SPMD programs), one group idles as spare
+        plan = recovery_plan(48, model_parallel=16)
+        assert plan["data_parallel"] == 2
+        assert plan["used_workers"] == 32
+        assert plan["spare_workers"] == 16
+
+    def test_dp_only_single_survivor(self):
+        plan = recovery_plan(1, model_parallel=1)
+        assert plan["feasible"] and plan["data_parallel"] == 1
+
+
+class TestFaultTolerantRunnerRetention:
+    def test_keep_plumbs_to_store(self, tmp_path):
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=1),
+            monitor=HeartbeatMonitor(1, timeout_s=1e9),
+            keep=2,
+        )
+        state = {"w": jnp.zeros((2,))}
+        for s in range(1, 5):
+            assert ft.maybe_checkpoint(state, s, 0.01)
+        assert len(list(tmp_path.glob("step-*"))) == 2
+        ft.emergency_checkpoint(state, 9, run_state={"step": 9})
+        kept = sorted(p.name for p in tmp_path.glob("step-*"))
+        assert kept == ["step-000000004", "step-000000009"]
+        assert store.load_run_state(tmp_path) == {"step": 9}
+
+    def test_run_state_thunk_only_called_on_save(self, tmp_path):
+        calls = []
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=5),
+            monitor=HeartbeatMonitor(1, timeout_s=1e9),
+        )
+        state = {"w": jnp.zeros(())}
+
+        def thunk():
+            calls.append(1)
+            return {"step": len(calls)}
+
+        for s in range(1, 5):
+            assert not ft.maybe_checkpoint(state, s, 0.01, run_state=thunk)
+        assert calls == []
+        assert ft.maybe_checkpoint(state, 5, 0.01, run_state=thunk)
+        assert calls == [1]
+
+
+class TestHeartbeatInjection:
+    def test_mark_dead_survives_heartbeats_until_reset(self):
+        mon = HeartbeatMonitor(4, timeout_s=1e9)
+        mon.mark_dead(2)
+        mon.heartbeat(2)  # a zombie's packets must not resurrect it
+        assert mon.dead_workers() == [2]
+        assert mon.alive() == 3
+        mon.reset(2)
+        assert mon.dead_workers() == []
+        assert sorted(mon.workers) == [0, 1]

@@ -4,6 +4,7 @@ import time
 
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     BucketingPolicy,
@@ -579,3 +580,95 @@ class TestSchedulerDispatchIntegration:
         assert {(r.batch_size, r.seq_len) for r in sch.telemetry._records} == {
             (b.batch_size, b.seq_len) for b in sch.buckets
         }
+
+
+class TestDeterministicRefinement:
+    """Fixed-round digest-seeded refinement: adoption must be a pure
+    function of the seed plan — never of thread scheduling — so every
+    host (and every killed-and-resumed run) dispatches the same plan."""
+
+    def _det_planner(self, seed, rounds, n_workers=4):
+        return StepPlanner(
+            BUCKETS, WEIGHTS, n_workers=n_workers, budget=3 * 2e8,
+            budget_of=LOAD, strategy="knapsack", seed=seed,
+            overlap=True, deterministic_refine=True, refine_rounds=rounds,
+        )
+
+    @given(
+        seed=st.integers(0, 2**16),
+        rounds=st.integers(1, 24),
+        n_workers=st.integers(2, 6),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_identical_adopted_plans_across_runs_and_interleavings(
+        self, seed, rounds, n_workers
+    ):
+        a = self._det_planner(seed, rounds, n_workers)
+        b = self._det_planner(seed, rounds, n_workers)
+        try:
+            # run A collects each adopted plan immediately; run B enqueues
+            # every ticket first and collects afterwards — a completely
+            # different worker-thread interleaving
+            da = []
+            tickets = []
+            for _ in range(4):
+                _, ta = a.plan_async()
+                da.append(ta.best().digest())
+                _, tb = b.plan_async()
+                tickets.append(tb)
+            db = [t.best().digest() for t in tickets]
+            assert da == db
+            # and the adopted plan never exceeds its seed's makespan
+            p, t = a.plan_async()
+            assert t.best().makespan() <= p.makespan() + 1e-9
+        finally:
+            a.close()
+            b.close()
+
+    def test_adoption_independent_of_worker_timing(self):
+        """A deterministic ticket blocks in best() rather than falling
+        back to its seed when polled before the worker finishes — the
+        wall-clock dependence the fixed-round mode exists to remove."""
+        from repro.core.dispatch import PlanRefiner, refine_fixed_rounds
+
+        pl = _planner(strategy="knapsack", seed=5)
+        pool = pl.draw_pool(np.random.default_rng(5))
+        loads = [LOAD(b) for b in pool]
+        seed_plan = StepPlanner(
+            BUCKETS, WEIGHTS, n_workers=4, budget=3 * 2e8, budget_of=LOAD,
+            strategy="lpt", seed=5,
+        ).plan_pool(pool)
+        ref = PlanRefiner(rounds=8, deterministic=True)
+        try:
+            immediate = ref.refine(seed_plan).best()  # polled instantly
+            t2 = ref.refine(seed_plan)
+            time.sleep(0.05)  # polled after the worker surely finished
+            late = t2.best()
+            assert immediate.digest() == late.digest()
+            expected = refine_fixed_rounds(
+                loads, seed_plan.assignments, rounds=8,
+                seed_bytes=seed_plan.digest(),
+            )
+            want = {tuple(sorted(g)) for g in expected}
+            got = {tuple(sorted(g)) for g in immediate.assignments}
+            # adoption picks refined iff strictly better, else the seed
+            if immediate is not seed_plan:
+                assert got == want
+        finally:
+            ref.close()
+
+    def test_fixed_rounds_monotone_and_pure(self):
+        from repro.core.dispatch import refine_fixed_rounds
+        from repro.core.balancer import assign_lpt
+
+        rng = np.random.default_rng(3)
+        for _ in range(25):
+            loads = rng.lognormal(0.0, 1.2, size=int(rng.integers(6, 30))).tolist()
+            n = int(rng.integers(2, 6))
+            seed = assign_lpt(loads, n)
+            a = refine_fixed_rounds(loads, seed, rounds=6, seed_bytes=b"x" * 8)
+            b = refine_fixed_rounds(loads, seed, rounds=6, seed_bytes=b"x" * 8)
+            assert a == b  # pure function of inputs
+            assert sorted(i for g in a for i in g) == list(range(len(loads)))
+            assert all(g for g in a)
+            assert makespan(loads, a) <= makespan(loads, seed) + 1e-9

@@ -1,0 +1,480 @@
+"""Resumable runs: kill-and-resume parity + engine-integrated fault
+tolerance (the PR's acceptance gates).
+
+* a run checkpointed at step k and resumed to 2k matches the uninterrupted
+  2k run — byte-identical plan digests at every step and parameters
+  <= 1e-5 rel-L2, for BOTH engines (emulated and mesh);
+* the driver's fault-tolerance loop: engines heartbeat per step, dead
+  ranks trigger emergency-save -> recovery_plan -> loader.resize ->
+  replan, and the shrunken run keeps oracle gradient parity;
+* scheduler state (fit + derate latch) survives a round trip.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.checkpoint import store  # noqa: E402
+from repro.core import (  # noqa: E402
+    AdaptiveLoadScheduler,
+    CostModel,
+    SchedulerConfig,
+)
+from repro.core.bucketing import BucketingPolicy, DataShape  # noqa: E402
+from repro.data.pipeline import ShardedBucketedLoader  # noqa: E402
+from repro.data.synthetic import make_lm_batch  # noqa: E402
+from repro.distributed.fault_tolerance import (  # noqa: E402
+    CheckpointCadence,
+    FaultTolerantRunner,
+    HeartbeatMonitor,
+)
+from repro.distributed.plan_exec import oracle_step, rel_l2  # noqa: E402
+from repro.launch.mesh import make_data_mesh  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.adamw import OptimizerConfig  # noqa: E402
+from repro.train.loop import Trainer, deserialize_rng_key  # noqa: E402
+from repro.train.steps import init_state  # noqa: E402
+
+CFG = ModelConfig(
+    name="resume-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, head_dim=16, d_ff=64, vocab=64, dtype="float32",
+)
+OPT = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+SHAPES = [
+    DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4), DataShape(17, 64, 64, 4)
+]
+BUCKETS = BucketingPolicy(m_mem=2_000, m_comp=3e5, p=2.0).make_buckets(SHAPES)
+LOAD = lambda b: b.load(2.0)  # noqa: E731
+
+
+def _make_batch(rng, bucket):
+    key = jax.random.PRNGKey(int(rng.integers(2**31)))
+    return jax.device_get(
+        make_lm_batch(key, bucket.batch_size, bucket.seq_len, CFG.vocab)
+    )
+
+
+def _loader(n_workers=4, seed=0, resume_state=None, **kw):
+    return ShardedBucketedLoader(
+        BUCKETS, None, _make_batch, n_workers=n_workers, budget=2 * 3e5,
+        budget_of=LOAD, strategy="knapsack", seed=seed,
+        resume_state=resume_state, **kw,
+    )
+
+
+def _trainer(kind, loader, ft=None):
+    mesh = None
+    if kind == "mesh":
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 (virtual) devices")
+        mesh = make_data_mesh(4)
+    return Trainer(
+        CFG, OPT, ft=ft, mesh=mesh,
+        run_state_of=lambda held: {"loader": loader.state_dict(rewind=held)},
+    )
+
+
+def _like():
+    return jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0), CFG, OPT))
+
+
+@pytest.mark.parametrize("kind", ["emulated", "mesh"])
+class TestKillResumeParity:
+    def test_resumed_run_matches_uninterrupted(self, kind, tmp_path):
+        k, total = 3, 6
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+
+        # uninterrupted reference: 2k steps
+        full = _loader()
+        try:
+            s_full, _ = _trainer(kind, full).run(
+                state0, iter(full), total, rng=jax.random.PRNGKey(1),
+                log_every=0,
+            )
+            full_digests = [p.digest().hex() for p in full.plans[:total]]
+        finally:
+            full.close()
+
+        # leg 1: k steps; the Young/Daly cadence saves at completed step k
+        # (weights + run state in one atomic manifest), then the job "dies"
+        loader_a = _loader()
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=k),
+            monitor=HeartbeatMonitor(4, timeout_s=1e9),
+            keep=2,
+        )
+        try:
+            _, hist_a = _trainer(kind, loader_a, ft=ft).run(
+                state0, iter(loader_a), k, rng=jax.random.PRNGKey(1),
+                log_every=0,
+            )
+            digests_a = [p.digest().hex() for p in loader_a.plans[:k]]
+        finally:
+            loader_a.close()
+        assert f"ckpt@{k - 1}" in hist_a.events
+        assert store.latest_step(tmp_path) == k
+
+        # leg 2: restore weights + run state, run the remaining k steps
+        run_state = store.load_run_state(tmp_path)
+        assert run_state is not None and run_state["step"] == k
+        # the blob must survive a JSON round trip (it lives in the manifest)
+        run_state = json.loads(json.dumps(run_state))
+        s_b = store.restore(tmp_path, _like())
+        assert int(np.asarray(jax.device_get(s_b["step"]))) == k
+        loader_b = _loader(resume_state=run_state["loader"])
+        try:
+            s_b, _ = _trainer(kind, loader_b).run(
+                s_b, iter(loader_b), total - k,
+                rng=deserialize_rng_key(run_state["trainer"]["rng"]),
+                start_step=k, log_every=0,
+            )
+            digests_b = [p.digest().hex() for p in loader_b.plans[: total - k]]
+        finally:
+            loader_b.close()
+
+        # byte-identical plan stream at every step ...
+        assert digests_a + digests_b == full_digests
+        # ... and matching parameters
+        assert rel_l2(
+            jax.device_get(s_b["params"]), jax.device_get(s_full["params"])
+        ) <= 1e-5
+
+    def test_resume_with_deterministic_overlap_refinement(self, kind, tmp_path):
+        """The overlapped refiner is only resumable in deterministic mode:
+        fixed digest-seeded rounds make the adopted plan a pure function of
+        the draw, so the resumed stream replays adoptions too."""
+        k, total = 2, 4
+        kw = dict(overlap=True, deterministic_refine=True, refine_rounds=8)
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        full = _loader(**kw)
+        try:
+            s_full, _ = _trainer(kind, full).run(
+                state0, iter(full), total, rng=jax.random.PRNGKey(1),
+                log_every=0,
+            )
+            full_digests = [p.digest().hex() for p in full.plans[:total]]
+        finally:
+            full.close()
+
+        loader_a = _loader(**kw)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=k),
+            monitor=HeartbeatMonitor(4, timeout_s=1e9),
+        )
+        try:
+            _trainer(kind, loader_a, ft=ft).run(
+                state0, iter(loader_a), k, rng=jax.random.PRNGKey(1),
+                log_every=0,
+            )
+            digests_a = [p.digest().hex() for p in loader_a.plans[:k]]
+        finally:
+            loader_a.close()
+
+        run_state = store.load_run_state(tmp_path)
+        s_b = store.restore(tmp_path, _like())
+        loader_b = _loader(resume_state=run_state["loader"], **kw)
+        try:
+            s_b, _ = _trainer(kind, loader_b).run(
+                s_b, iter(loader_b), total - k,
+                rng=deserialize_rng_key(run_state["trainer"]["rng"]),
+                start_step=k, log_every=0,
+            )
+            digests_b = [p.digest().hex() for p in loader_b.plans[: total - k]]
+        finally:
+            loader_b.close()
+        assert digests_a + digests_b == full_digests
+        assert rel_l2(
+            jax.device_get(s_b["params"]), jax.device_get(s_full["params"])
+        ) <= 1e-5
+
+
+class _Recorder:
+    """Wrap a data iterator, remembering every consumed item so the run
+    can be replayed through the single-device oracle."""
+
+    def __init__(self, it):
+        self._it = it
+        self.items = []
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = next(self._it)
+        self.items.append(item)
+        return item
+
+
+def _oracle_replay(state, items, rng):
+    for ws in items:
+        rng, sub = jax.random.split(rng)
+        state, _ = oracle_step(CFG, OPT, state, ws, step_key=sub)
+    return state, rng
+
+
+class TestElasticResizeFaultTolerance:
+    def test_dead_ranks_trigger_resize_and_gradient_parity(self, tmp_path):
+        """Marked-dead ranks at step 1 -> the driver emergency-saves,
+        shrinks the loader 4->2 via recovery_plan, re-arms the monitor,
+        and keeps training; every executed fan-out (4-rank before, 2-rank
+        after) matches the single-device oracle <= 1e-5; the emergency
+        checkpoint then restores and continues with parity too."""
+        n_steps = 6
+        loader = _loader()
+        monitor = HeartbeatMonitor(4, timeout_s=1e9)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e9, 1e9, min_interval_steps=10**6),
+            monitor=monitor,
+            on_resize=loader.resize,
+            model_parallel=1,
+            keep=3,
+        )
+        trainer = Trainer(
+            CFG, OPT, ft=ft,
+            run_state_of=lambda held: {
+                "loader": loader.state_dict(rewind=held)
+            },
+        )
+        rec = _Recorder(iter(loader))
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+
+        def on_metrics(step, m):
+            if step == 1:
+                monitor.mark_dead(2)
+                monitor.mark_dead(3)
+
+        try:
+            s_end, hist = trainer.run(
+                state0, rec, n_steps, rng=jax.random.PRNGKey(1),
+                log_every=0, on_metrics=on_metrics,
+            )
+        finally:
+            loader.close()
+
+        # failure handled exactly once: emergency save + 4->2 shrink
+        failures = [e for e in hist.events if e.startswith("failure@")]
+        assert len(failures) == 1 and "'data_parallel': 2" in failures[0]
+        assert loader.n_workers == 2
+        assert monitor.dead_workers() == [] and len(monitor.workers) == 2
+        widths = [len(ws) for ws in rec.items]
+        assert widths[:2] == [4, 4] and widths[-1] == 2, widths
+
+        # gradient parity across the resize: replay every consumed fan-out
+        # through the single-device oracle
+        s_oracle, _ = _oracle_replay(state0, rec.items, jax.random.PRNGKey(1))
+        assert rel_l2(
+            jax.device_get(s_end["params"]), jax.device_get(s_oracle["params"])
+        ) <= 1e-5
+
+        # the emergency checkpoint restores and CONTINUES with parity
+        run_state = store.load_run_state(tmp_path)
+        assert run_state is not None
+        s_r = store.restore(tmp_path, _like())
+        start = run_state["step"]
+        loader2 = _loader(resume_state=run_state["loader"])
+        rec2 = _Recorder(iter(loader2))
+        try:
+            s_r2, _ = Trainer(CFG, OPT).run(
+                s_r, rec2, 2,
+                rng=deserialize_rng_key(run_state["trainer"]["rng"]),
+                start_step=start, log_every=0,
+            )
+        finally:
+            loader2.close()
+        s_r_oracle, _ = _oracle_replay(
+            s_r, rec2.items, deserialize_rng_key(run_state["trainer"]["rng"])
+        )
+        assert rel_l2(
+            jax.device_get(s_r2["params"]), jax.device_get(s_r_oracle["params"])
+        ) <= 1e-5
+
+    def test_engines_heartbeat_per_step(self):
+        loader = _loader(n_workers=2)
+        monitor = HeartbeatMonitor(2, timeout_s=1e9)
+        seen = []
+        orig = monitor.heartbeat
+        monitor.heartbeat = lambda w, t=None: (seen.append(w), orig(w, t))
+        ft = FaultTolerantRunner(
+            ckpt_dir="/tmp/unused-hb",
+            cadence=CheckpointCadence(1e9, 1e9, min_interval_steps=10**6),
+            monitor=monitor,
+        )
+        try:
+            Trainer(CFG, OPT, ft=ft).run(
+                init_state(jax.random.PRNGKey(0), CFG, OPT),
+                iter(loader), 3, log_every=0,
+            )
+        finally:
+            loader.close()
+        assert seen.count(0) == 3 and seen.count(1) == 3
+
+    def test_infeasible_recovery_reported_not_resized(self, tmp_path):
+        """Fewer survivors than one model group: the failure is reported
+        (and state saved) but no resize fires."""
+        loader = _loader(n_workers=2)
+        monitor = HeartbeatMonitor(2, timeout_s=1e9)
+        resized = []
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e9, 1e9, min_interval_steps=10**6),
+            monitor=monitor,
+            on_resize=resized.append,
+            model_parallel=4,  # 1 survivor < one 4-wide model group
+        )
+        monitor.mark_dead(1)
+        try:
+            _, hist = Trainer(CFG, OPT, ft=ft).run(
+                init_state(jax.random.PRNGKey(0), CFG, OPT),
+                iter(loader), 1, log_every=0,
+            )
+        finally:
+            loader.close()
+        assert resized == []
+        assert any("'feasible': False" in e for e in hist.events)
+        assert store.latest_step(tmp_path) == 1  # emergency save still landed
+
+
+class TestSchedulerStateRoundTrip:
+    def _scheduler(self, n_workers=4):
+        model = CostModel(a=0.0, b=1.0, p=2.0, r2=1.0, n_samples=10)
+        cfg = SchedulerConfig(
+            target_sync=3200.0, m_mem=80.0, refit_interval=10_000,
+            min_samples=10_000,
+        )
+        shapes = [DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4)]
+        return AdaptiveLoadScheduler(
+            cfg, shapes, initial_model=model, n_workers=n_workers
+        )
+
+    def test_fit_derate_and_workers_survive(self):
+        a = self._scheduler()
+        a._derate = 0.9
+        a.model = CostModel(a=0.1, b=2.0, p=1.8, r2=0.95, n_samples=64)
+        a._steps_seen = 123
+        a.resize(6)
+        sd = json.loads(json.dumps(a.state_dict()))
+
+        b = self._scheduler()
+        planner = b.make_planner(seed=0)
+        b.load_state_dict(sd)
+        assert b.model == a.model
+        assert b._derate == 0.9
+        assert b._steps_seen == a._steps_seen
+        assert b.n_workers == 6
+        assert planner.n_workers == 6  # restored state reached dispatch
+        assert [bk.shape for bk in b.buckets] == [bk.shape for bk in a.buckets]
+        assert planner.budget == pytest.approx(b.policy.m_comp)
+        b.close()
+
+
+class TestLiveLoaderRestore:
+    def test_load_state_dict_rewinds_live_stream(self):
+        """An in-place restore (no rebuild) discards pending plans, resets
+        the RNG streams, and replays the exact plan stream from the
+        snapshot — the epoch bump + draw lock keep a mid-draw producer
+        from leaking pre-restore RNG state into the replay."""
+        import time as _time
+
+        loader = _loader(n_workers=2)
+        try:
+            for _ in range(3):
+                next(loader)
+            sd = loader.state_dict()  # next unconsumed = emitted plan 3
+            next(loader)
+            next(loader)
+            want = [p.digest() for p in loader.plans[3:5]]
+            loader.load_state_dict(sd)
+            got = []
+            deadline = _time.time() + 20.0
+            while len(got) < 2 and _time.time() < deadline:
+                next(loader)
+                got = [p.digest() for p in loader.plans[:2]]
+            assert got == want, "restored stream must replay the same plans"
+        finally:
+            loader.close()
+
+
+class TestSnapshotUnavailableHandling:
+    def test_cadence_defers_and_emergency_degrades(self, tmp_path):
+        """When the loader can't snapshot (resize drain), a cadence save
+        is deferred (event, no crash, no checkpoint) while an emergency
+        save degrades to weights + trainer RNG instead of being lost."""
+        from repro.data.pipeline import SnapshotUnavailable
+
+        def raising_run_state(held):
+            raise SnapshotUnavailable("resize in flight")
+
+        loader = _loader(n_workers=2)
+        monitor = HeartbeatMonitor(2, timeout_s=1e9)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=1),
+            monitor=monitor,
+            model_parallel=4,  # any failure is infeasible: no resize fires
+        )
+        trainer = Trainer(CFG, OPT, ft=ft, run_state_of=raising_run_state)
+
+        def on_metrics(step, m):
+            if step == 1:
+                monitor.mark_dead(1)
+
+        try:
+            _, hist = trainer.run(
+                init_state(jax.random.PRNGKey(0), CFG, OPT), iter(loader), 3,
+                log_every=0, on_metrics=on_metrics,
+            )
+        finally:
+            loader.close()
+        # every cadence attempt deferred, none crashed the run
+        assert [e for e in hist.events if e.startswith("ckpt-deferred@")]
+        assert not [e for e in hist.events if e.startswith("ckpt@")]
+        # the emergency save landed, with a degraded (loader-less) blob
+        assert [e for e in hist.events if e.startswith("failure@")]
+        rs = store.load_run_state(tmp_path)
+        assert rs is not None and "trainer" in rs and "loader" not in rs
+
+    def test_unrecoverable_failure_saves_once(self, tmp_path):
+        """A persistent infeasible failure must not re-write the full
+        state every step."""
+        loader = _loader(n_workers=2)
+        monitor = HeartbeatMonitor(2, timeout_s=1e9)
+        monitor.mark_dead(1)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e9, 1e9, min_interval_steps=10**6),
+            monitor=monitor,
+            model_parallel=4,
+        )
+        try:
+            _, hist = Trainer(CFG, OPT, ft=ft).run(
+                init_state(jax.random.PRNGKey(0), CFG, OPT), iter(loader), 4,
+                log_every=0,
+            )
+        finally:
+            loader.close()
+        assert len([e for e in hist.events if e.startswith("failure@")]) == 1
+
+    def test_resume_does_not_recheckpoint_immediately(self, tmp_path):
+        """note_restored: the restored checkpoint counts as start_step's
+        save, so the first post-restore steps don't re-save."""
+        loader = _loader(n_workers=2)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=5),
+            monitor=HeartbeatMonitor(2, timeout_s=1e9),
+        )
+        try:
+            _, hist = Trainer(CFG, OPT, ft=ft).run(
+                init_state(jax.random.PRNGKey(0), CFG, OPT), iter(loader), 3,
+                start_step=100, log_every=0,
+            )
+        finally:
+            loader.close()
+        assert not [e for e in hist.events if e.startswith("ckpt@")]
+        assert ft._last_saved_step == 100
