@@ -2,7 +2,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-attn example
+.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-churn bench-attn example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -40,6 +40,12 @@ bench-resume:
 	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 		--only dispatch --smoke --resume
+
+# elastic churn: capacity-weighted packing on a 2-class fleet (measured
+# compute-CV vs uniform) + chaos kill/join/preempt digest + param parity
+bench-churn:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --churn
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention

@@ -52,7 +52,7 @@ SEED = 7
 
 def run(
     csv: list[str], smoke: bool = False, mesh: bool = False,
-    overlap: bool = False, resume: bool = False,
+    overlap: bool = False, resume: bool = False, churn: bool = False,
 ) -> dict:
     if overlap and not mesh:
         raise SystemExit("--overlap benchmarks mesh execution; pass --mesh")
@@ -61,6 +61,8 @@ def run(
         out["mesh"] = run_mesh(csv, smoke=smoke, overlap=overlap)
     if resume:
         out["resume"] = run_resume(csv, smoke=smoke)
+    if churn:
+        out["churn"] = run_churn(csv, smoke=smoke)
     return out
 
 
@@ -639,6 +641,219 @@ def run_resume(csv: list[str], smoke: bool = False) -> dict:
     return out
 
 
+# -- churn mode: elastic capacity under deterministic fault injection ----------
+
+
+def run_churn(csv: list[str], smoke: bool = False) -> dict:
+    """Elastic-churn acceptance, measured two ways.
+
+    **Mixed fleet** — an 8-rank, 2-class fleet (half the ranks derated
+    2x) executes the SAME planned pools twice: once packed uniformly
+    (capacity-blind status quo) and once packed against the per-rank
+    capacity vector.  Per-rank wall time = assigned load / capacity;
+    capacity-weighted packing must cut the measured compute-CV.
+
+    **Churn parity** — the real Trainer + chaos harness on the emulated
+    engine: one uninterrupted reference run vs a leg that suffers
+    kill@k (two ranks), join@m (back to full width), preempt@n
+    (graceful drain + run-state save), then resumes to the end from the
+    saved state.  Acceptance: byte-identical plan digests at every step
+    and final parameters <= 1e-5 rel-L2 vs the uninterrupted run.
+    """
+    out = _churn_fleet(csv, smoke=smoke)
+    out.update(_churn_parity(csv, smoke=smoke))
+    return out
+
+
+def _churn_fleet(csv: list[str], smoke: bool = False) -> dict:
+    from repro.core import StepPlanner
+    from repro.core.balancer import assign_lpt
+
+    shapes, weights = wan_mixed_corpus()
+    policy = BucketingPolicy(m_mem=100_000, m_comp=6e9, p=2.0)
+    buckets = policy.make_buckets(shapes)
+
+    def load_of(b) -> float:
+        return b.load(policy.p)
+
+    n = N_WORKERS
+    caps = (1.0,) * (n // 2) + (0.5,) * (n // 2)  # 2-class fleet, 2x derate
+    n_steps = 40 if smoke else 160
+    planner = StepPlanner(
+        buckets, weights, n_workers=n, budget=ACCUMULATION * policy.m_comp,
+        budget_of=load_of, load_of=load_of, strategy="lpt", seed=SEED,
+    )
+
+    def fleet_cv(loads, assignment) -> float:
+        times = np.array([
+            sum(loads[i] for i in group) / caps[w]
+            for w, group in enumerate(assignment)
+        ])
+        return float(times.std() / times.mean())
+
+    cv_u, cv_w = [], []
+    for _ in range(n_steps):
+        plan = planner.plan()  # capacity-blind pools: identical inputs
+        loads = list(plan.loads)
+        cv_u.append(fleet_cv(loads, assign_lpt(loads, n)))
+        cv_w.append(fleet_cv(loads, assign_lpt(loads, n, caps)))
+    u, w = float(np.mean(cv_u)), float(np.mean(cv_w))
+    ratio = w / u
+    print(f"[dispatch/churn] mixed fleet ({n} ranks, caps {caps}): "
+          f"measured compute-CV {u:.3f} (uniform packing) -> {w:.3f} "
+          f"(capacity-weighted), ratio {ratio:.3f}")
+    csv.append(
+        f"dispatch.churn_fleet,0.0,cv={u:.3f}->{w:.3f};ratio={ratio:.3f}"
+    )
+    assert w < u, (
+        "capacity-weighted packing must beat uniform packing on a "
+        "heterogeneous fleet's measured compute-CV"
+    )
+    return {
+        "mixed_fleet_cv_uniform": u,
+        "mixed_fleet_cv_weighted": w,
+        "mixed_fleet_cv_ratio": ratio,
+    }
+
+
+def _churn_parity(csv: list[str], smoke: bool = False) -> dict:
+    import tempfile
+
+    import jax
+
+    from repro.core.bucketing import BucketingPolicy as _BP
+    from repro.data.pipeline import ShardedBucketedLoader
+    from repro.distributed.chaos import ChaosSchedule
+    from repro.distributed.fault_tolerance import (
+        CheckpointCadence, FaultTolerantRunner, HeartbeatMonitor,
+        PreemptionNotice,
+    )
+    from repro.distributed.plan_exec import rel_l2
+    from repro.data.synthetic import make_lm_batch
+    from repro.models.config import ModelConfig
+    from repro.optim.adamw import OptimizerConfig
+    from repro.train.loop import Trainer, deserialize_rng_key
+    from repro.train.steps import init_state
+    from repro.checkpoint import store
+
+    cfg = ModelConfig(
+        name="churn-bench", family="dense", n_layers=2, d_model=64,
+        n_heads=2, n_kv_heads=1, head_dim=32, d_ff=128, vocab=256,
+        dtype="float32",
+    )
+    opt = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+    policy = _BP(m_mem=4096, m_comp=2e7, p=2.0)
+    buckets = policy.make_buckets(MESH_SHAPES)
+    n_workers = 4
+    n_steps = 8 if smoke else 16
+    kill_s, join_s, pre_s = (1, 3, 5) if smoke else (4, 8, 12)
+    spec = f"kill@{kill_s}:2,3;join@{join_s}:2;preempt@{pre_s}"
+
+    def make_batch(rng, b):
+        key = jax.random.PRNGKey(int(rng.integers(2**31)))
+        return jax.device_get(
+            make_lm_batch(key, b.batch_size, b.seq_len, cfg.vocab)
+        )
+
+    def make_loader(resume_state=None):
+        return ShardedBucketedLoader(
+            buckets, None, make_batch, n_workers=n_workers,
+            budget=3.0 * policy.m_mem, budget_of=lambda b: float(b.tokens),
+            load_of=lambda b: b.load(2.0), strategy="lpt",
+            seed=SEED, resume_state=resume_state,
+        )
+
+    def make_trainer(loader, ft=None, chaos=None):
+        return Trainer(
+            cfg, opt, ft=ft, chaos=chaos,
+            run_state_of=lambda held: {"loader": loader.state_dict(rewind=held)},
+        )
+
+    state0 = init_state(jax.random.PRNGKey(0), cfg, opt)
+
+    # uninterrupted reference
+    full_loader = make_loader()
+    s_full, _ = make_trainer(full_loader).run(
+        state0, iter(full_loader), n_steps, rng=jax.random.PRNGKey(1),
+        log_every=0,
+    )
+    full_digests = [p.digest().hex() for p in full_loader.plans[:n_steps]]
+    full_loader.close()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # leg 1: chaos-injected — shrink, regrow, graceful preemption
+        loader_a = make_loader()
+        ft = FaultTolerantRunner(
+            ckpt_dir=ckpt_dir,
+            cadence=CheckpointCadence(1e-9, 1e9,
+                                      min_interval_steps=4 * n_steps),
+            monitor=HeartbeatMonitor(n_workers, timeout_s=1e9),
+            keep=2,
+            preemption=PreemptionNotice(),
+        )
+        tr = make_trainer(loader_a, ft=ft,
+                          chaos=ChaosSchedule.from_spec(spec))
+        # remap elasticity: logical plan width stays n_workers; churn only
+        # regroups shares onto the surviving/grown physical fleet
+        ft.on_resize = tr.set_physical_ranks
+        _, hist_a = tr.run(
+            state0, iter(loader_a), n_steps, rng=jax.random.PRNGKey(1),
+            log_every=0,
+        )
+        assert hist_a.preempted, (
+            f"chaos preempt@{pre_s} must break the training loop"
+        )
+        n_done = len(hist_a.losses)
+        digests_a = [p.digest().hex() for p in loader_a.plans[:n_done]]
+        loader_a.close()
+
+        # leg 2: resume from the preemption handoff and finish the run
+        run_state = store.load_run_state(ckpt_dir)
+        assert run_state is not None and run_state["step"] == n_done
+        s_b = store.restore(
+            ckpt_dir, jax.eval_shape(lambda: init_state(
+                jax.random.PRNGKey(0), cfg, opt))
+        )
+        loader_b = make_loader(resume_state=run_state["loader"])
+        s_b, _ = make_trainer(loader_b).run(
+            s_b, iter(loader_b), n_steps - n_done,
+            rng=deserialize_rng_key(run_state["trainer"]["rng"]),
+            start_step=run_state["step"], log_every=0,
+        )
+        digests_b = [
+            p.digest().hex() for p in loader_b.plans[: n_steps - n_done]
+        ]
+        loader_b.close()
+
+    resumed = digests_a + digests_b
+    mismatches = sum(1 for a, b in zip(full_digests, resumed) if a != b)
+    mismatches += abs(len(full_digests) - len(resumed))
+    parity = rel_l2(
+        jax.device_get(s_full["params"]), jax.device_get(s_b["params"])
+    )
+    out = {
+        "engine": "emulated",
+        "steps": n_steps,
+        "chaos": spec,
+        "events": list(hist_a.events),
+        "digest_mismatches": mismatches,
+        "param_rel_l2": float(parity),
+    }
+    print(f"[dispatch/churn] {spec} over {n_steps} steps + resume: "
+          f"digest mismatches {mismatches}/{n_steps}, param rel-L2 "
+          f"{parity:.2e}; leg-1 events {hist_a.events}")
+    csv.append(
+        f"dispatch.churn,0.0,mismatch={mismatches};parity={parity:.2e}"
+    )
+    assert mismatches == 0, (
+        "churned run must replay byte-identical plan digests"
+    )
+    assert parity <= 1e-5, (
+        f"churned parameters drifted from the uninterrupted run: {parity:.2e}"
+    )
+    return out
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -647,7 +862,9 @@ if __name__ == "__main__":
     ap.add_argument("--overlap", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--churn", action="store_true")
     a = ap.parse_args()
     rows: list[str] = []
-    run(rows, smoke=a.smoke, mesh=a.mesh, overlap=a.overlap, resume=a.resume)
+    run(rows, smoke=a.smoke, mesh=a.mesh, overlap=a.overlap, resume=a.resume,
+        churn=a.churn)
     print("\n".join(rows))

@@ -95,6 +95,10 @@ def main() -> None:
                     help="add the kill-and-resume parity section to the "
                          "dispatch bench (checkpoint/restore walls, digest "
                          "+ parameter parity)")
+    ap.add_argument("--churn", action="store_true",
+                    help="add the elastic-churn section to the dispatch "
+                         "bench (mixed-fleet capacity-weighted packing CV "
+                         "+ chaos kill/join/preempt digest parity)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results as JSON (CI artifact)")
     args = ap.parse_args()
@@ -136,6 +140,8 @@ def main() -> None:
                 kwargs["overlap"] = args.overlap
             if "resume" in params:
                 kwargs["resume"] = args.resume
+            if "churn" in params:
+                kwargs["churn"] = args.churn
             results[name] = m.run(csv, **kwargs)
         except Exception:  # noqa: BLE001
             failures.append(name)

@@ -20,21 +20,57 @@ Design (no orbax in the container; same contract):
   leaf carrying a ``.sharding`` gets ``jax.device_put`` onto it), so a job
   restarted on a *different* worker count (elastic scaling) restores
   transparently;
-* retention keeps the newest K checkpoints.
+* retention keeps the newest K checkpoints;
+* transient I/O failures (a flaky NFS rename, a parallel-FS hiccup) are
+  retried with bounded jittered exponential backoff: the whole tmp-write +
+  atomic-swap sequence is an idempotent unit, so re-running it is safe, and
+  each retry is reported via ``on_retry`` so the run's event log shows the
+  storage layer flapping before it hard-fails.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import random
 import shutil
+import time
 from pathlib import Path
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import numpy as np
 
 MANIFEST_VERSION = 2
+
+#: default bounded-retry budget for save/restore I/O (1 = no retries)
+DEFAULT_MAX_ATTEMPTS = 3
+
+
+def _with_retries(
+    fn: Callable[[], Any],
+    *,
+    max_attempts: int,
+    backoff_s: float,
+    on_retry: Callable[[int, Exception], None] | None,
+) -> Any:
+    """Run an idempotent I/O closure, retrying transient ``OSError``
+    (``PermissionError`` included) with jittered exponential backoff."""
+    if max_attempts < 1:
+        raise ValueError("max_attempts must be >= 1")
+    for attempt in range(1, max_attempts + 1):
+        try:
+            return fn()
+        except FileNotFoundError:
+            raise  # a missing checkpoint is a real answer, not a flake
+        except OSError as exc:
+            if attempt >= max_attempts:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            # full jitter keeps a fleet of retrying writers decorrelated
+            delay = backoff_s * (2 ** (attempt - 1)) * (0.5 + random.random())
+            time.sleep(delay)
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -57,8 +93,6 @@ def _sweep_tmp(d: Path, *, skip: Path | None = None) -> None:
     Age-gated: only directories untouched for ``TMP_SWEEP_MIN_AGE_S`` are
     removed, so a reader (``latest_step``) or a second writer sharing the
     directory can never destroy an in-flight save."""
-    import time
-
     now = time.time()
     for p in d.glob("tmp-*"):
         if not p.is_dir() or p == skip:
@@ -78,18 +112,20 @@ def save(
     *,
     keep: int = 3,
     run_state: dict | None = None,
+    max_attempts: int = DEFAULT_MAX_ATTEMPTS,
+    backoff_s: float = 0.05,
+    on_retry: Callable[[int, Exception], None] | None = None,
 ) -> Path:
     """Write one checkpoint; ``run_state`` (JSON-serializable) rides in the
-    manifest so weights and replayable run state commit atomically."""
-    d = Path(directory)
-    d.mkdir(parents=True, exist_ok=True)
-    tmp = d / f"tmp-{step}"
-    final = d / f"step-{step:09d}"
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    _sweep_tmp(d, skip=tmp)
-    tmp.mkdir()
+    manifest so weights and replayable run state commit atomically.
 
+    The tmp-write + atomic-rename sequence retries up to ``max_attempts``
+    times on transient ``OSError``/``PermissionError`` (jittered
+    exponential backoff from ``backoff_s``); ``on_retry(attempt, exc)``
+    fires once per retry."""
+    d = Path(directory)
+    # host-side array gathering is NOT retried: it is not I/O, and a
+    # device error should surface immediately
     flat = _flatten(state)
     manifest = {"version": MANIFEST_VERSION, "step": int(step), "leaves": {}}
     if run_state is not None:
@@ -105,13 +141,33 @@ def save(
             meta["stored"] = "uint16_bits"
         arrays[name] = arr
         manifest["leaves"][key] = meta
-    np.savez(tmp / "arrays.npz", **arrays)
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
-    if final.exists():
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+
+    tmp = d / f"tmp-{step}"
+    final = d / f"step-{step:09d}"
+
+    def _write() -> Path:
+        # idempotent as a unit: every attempt rebuilds tmp from scratch
+        # and the final os.replace is all-or-nothing
+        d.mkdir(parents=True, exist_ok=True)
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        _sweep_tmp(d, skip=tmp)
+        tmp.mkdir()
+        np.savez(tmp / "arrays.npz", **arrays)
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        return final
+
+    out = _with_retries(
+        _write,
+        max_attempts=max_attempts,
+        backoff_s=backoff_s,
+        on_retry=on_retry,
+    )
     _apply_retention(d, keep)
-    return final
+    return out
 
 
 def _apply_retention(d: Path, keep: int) -> None:
@@ -150,15 +206,37 @@ def load_run_state(
     return manifest.get("run_state")
 
 
-def restore(directory: str | os.PathLike, like, *, step: int | None = None):
+def restore(
+    directory: str | os.PathLike,
+    like,
+    *,
+    step: int | None = None,
+    max_attempts: int = DEFAULT_MAX_ATTEMPTS,
+    backoff_s: float = 0.05,
+    on_retry: Callable[[int, Exception], None] | None = None,
+):
     """Restore into the structure of ``like`` (a pytree of arrays or
     ShapeDtypeStructs).  Raises if the stored tree doesn't match.  A leaf
     of ``like`` that carries a ``.sharding`` (a committed ``jax.Array`` or
     a ShapeDtypeStruct built with one) has its restored value
     ``jax.device_put`` onto that sharding — the restoring job's mesh, not
-    the saving job's, decides placement."""
-    src, manifest = _read_manifest(directory, step)
-    data = np.load(src / "arrays.npz")
+    the saving job's, decides placement.  Manifest + array reads retry
+    transient I/O errors like :func:`save` does (``FileNotFoundError`` —
+    genuinely absent checkpoints — is not retried)."""
+
+    def _read():
+        src, manifest = _read_manifest(directory, step)
+        # force the lazy NpzFile inside the retry scope so a torn read
+        # surfaces here, not later at first array access
+        with np.load(src / "arrays.npz") as data:
+            return manifest, {k: data[k] for k in data.files}
+
+    manifest, data = _with_retries(
+        _read,
+        max_attempts=max_attempts,
+        backoff_s=backoff_s,
+        on_retry=on_retry,
+    )
 
     flat_like = _flatten(like)
     missing = set(flat_like) - set(manifest["leaves"])

@@ -69,25 +69,66 @@ def assign_random(
     return out
 
 
-def assign_lpt(loads: Sequence[float], n_workers: int) -> list[list[int]]:
-    """Greedy LPT: heaviest item first onto the currently lightest worker.
+def assign_lpt(
+    loads: Sequence[float],
+    n_workers: int,
+    capacities: Sequence[float] | None = None,
+) -> list[list[int]]:
+    """Greedy LPT: heaviest item first onto the worker that would finish
+    it earliest.
 
     Classic 4/3-approximation of makespan scheduling; this is the
     "intra-step re-alignment" lever on top of the dual-constraint batch
-    sizes.
+    sizes.  With ``capacities`` (per-worker relative speeds; 1.0 = nominal)
+    the greedy criterion becomes *finish time* ``(total + load) / capacity``
+    instead of raw total, so fast ranks absorb proportionally more packed
+    load on a heterogeneous fleet.  ``capacities=None`` is exactly the
+    uniform classic.
     """
+    if capacities is not None:
+        caps = _validated_capacities(capacities, n_workers)
+    else:
+        caps = [1.0] * n_workers
     order = sorted(range(len(loads)), key=lambda i: -loads[i])
     totals = [0.0] * n_workers
     out: list[list[int]] = [[] for _ in range(n_workers)]
     for i in order:
-        w = min(range(n_workers), key=totals.__getitem__)
+        w = min(
+            range(n_workers),
+            key=lambda r: (totals[r] + loads[i]) / caps[r],
+        )
         out[w].append(i)
         totals[w] += loads[i]
     return out
 
 
-def makespan(loads: Sequence[float], assignment: Sequence[Sequence[int]]) -> float:
-    return max(sum(loads[i] for i in group) for group in assignment)
+def _validated_capacities(
+    capacities: Sequence[float], n_workers: int
+) -> list[float]:
+    caps = [float(c) for c in capacities]
+    if len(caps) != n_workers:
+        raise ValueError(
+            f"{len(caps)} capacities for {n_workers} workers"
+        )
+    if any(c <= 0 for c in caps):
+        raise ValueError("worker capacities must be positive")
+    return caps
+
+
+def makespan(
+    loads: Sequence[float],
+    assignment: Sequence[Sequence[int]],
+    capacities: Sequence[float] | None = None,
+) -> float:
+    """Max per-worker *time*: group load divided by the worker's capacity
+    (uniform capacities reduce to the classic max group-sum)."""
+    if capacities is None:
+        return max(sum(loads[i] for i in group) for group in assignment)
+    caps = _validated_capacities(capacities, len(assignment))
+    return max(
+        sum(loads[i] for i in group) / caps[w]
+        for w, group in enumerate(assignment)
+    )
 
 
 @dataclasses.dataclass

@@ -69,6 +69,9 @@ from .bucketing import Bucket
 
 DISPATCH_STRATEGIES = ("random", "lpt", "knapsack")
 
+# sentinel distinguishing "not passed" from an explicit None in update()
+_UNSET: object = object()
+
 
 def microbatch_key(b) -> tuple:
     """Canonical identity of one pool microbatch, stable across processes.
@@ -107,6 +110,11 @@ def plan_digest(plan: "StepPlan") -> bytes:
     for group in plan.assignments:
         h.update(np.asarray(group, dtype=np.int64).tobytes())
         h.update(b"|")
+    if plan.capacities is not None:
+        # only hashed when set, so uniform-fleet digests are byte-stable
+        # across versions that predate capacity-weighted planning
+        h.update(b"cap")
+        h.update(np.asarray(plan.capacities, dtype=np.float64).tobytes())
     return h.digest()
 
 
@@ -141,6 +149,10 @@ class StepPlan:
     assignments: tuple[tuple[int, ...], ...]  # per-worker indices into the pool
     loads: tuple[float, ...]  # per-microbatch packing weight (B*S^p)
     strategy: str
+    #: per-worker relative speeds the pool was packed against (1.0 =
+    #: nominal); None on a uniform fleet — digest-compatible with plans
+    #: produced before heterogeneous-rank planning existed
+    capacities: tuple[float, ...] | None = None
 
     @property
     def n_workers(self) -> int:
@@ -158,13 +170,25 @@ class StepPlan:
             sum(self.loads[i] for i in group) for group in self.assignments
         ]
 
+    def worker_times(self) -> list[float]:
+        """Predicted per-worker step times: packed load over capacity
+        (equal to ``worker_loads`` on a uniform fleet)."""
+        if self.capacities is None:
+            return self.worker_loads()
+        return [
+            load / cap
+            for load, cap in zip(self.worker_loads(), self.capacities)
+        ]
+
     def makespan(self) -> float:
-        return max(self.worker_loads())
+        return max(self.worker_times())
 
     def compute_cv(self) -> float:
-        """std/mean of per-worker packed load — the paper's Compute CV,
-        evaluated on the plan itself (before any hardware jitter)."""
-        o = np.asarray(self.worker_loads(), dtype=np.float64)
+        """std/mean of per-worker packed *time* — the paper's Compute CV,
+        evaluated on the plan itself (before any hardware jitter).  On a
+        heterogeneous fleet the balanced quantity is finish time, so the
+        CV weights each rank's load by its capacity."""
+        o = np.asarray(self.worker_times(), dtype=np.float64)
         return float(o.std() / o.mean()) if o.mean() > 0 else 0.0
 
     def digest(self) -> bytes:
@@ -179,21 +203,29 @@ def _apply_best_exchange(
     hi: int,
     lo: int,
     eps: float,
+    capacities: Sequence[float] | None = None,
 ) -> bool:
     """Apply the best single-item move/swap between workers ``hi`` and
-    ``lo`` (``totals[hi] >= totals[lo]``), minimizing the pair's new
-    maximum.  Returns True iff an exchange strictly improved the pair max.
-    The pair's maximum never increases, so the global makespan is monotone
-    non-increasing under any sequence of these exchanges.  Workers are
-    never emptied (a move requires the donor to keep >= 1 item)."""
-    pair_max = totals[hi]
-    if pair_max - totals[lo] <= eps:
+    ``lo`` (``hi`` the slower-finishing of the pair), minimizing the pair's
+    new maximum *finish time* (``total / capacity``; uniform capacities
+    reduce to raw totals).  Returns True iff an exchange strictly improved
+    the pair max.  The pair's maximum never increases, so the global
+    makespan is monotone non-increasing under any sequence of these
+    exchanges.  Workers are never emptied (a move requires the donor to
+    keep >= 1 item)."""
+    c_hi = capacities[hi] if capacities is not None else 1.0
+    c_lo = capacities[lo] if capacities is not None else 1.0
+    pair_max = totals[hi] / c_hi
+    if pair_max - totals[lo] / c_lo <= eps:
         return False
     best_max = pair_max
     best: tuple[str, int, int] | None = None
     if len(groups[hi]) > 1:
         for i in groups[hi]:
-            cand = max(totals[hi] - loads[i], totals[lo] + loads[i])
+            cand = max(
+                (totals[hi] - loads[i]) / c_hi,
+                (totals[lo] + loads[i]) / c_lo,
+            )
             if cand < best_max - eps:
                 best_max, best = cand, ("move", i, -1)
     for i in groups[hi]:
@@ -201,7 +233,9 @@ def _apply_best_exchange(
             delta = loads[i] - loads[j]
             if delta <= 0:
                 continue
-            cand = max(totals[hi] - delta, totals[lo] + delta)
+            cand = max(
+                (totals[hi] - delta) / c_hi, (totals[lo] + delta) / c_lo
+            )
             if cand < best_max - eps:
                 best_max, best = cand, ("swap", i, j)
     if best is None:
@@ -229,22 +263,33 @@ def refine_swaps(
     *,
     max_rounds: int = 64,
     eps: float = 1e-12,
+    capacities: Sequence[float] | None = None,
 ) -> list[list[int]]:
-    """Pairwise rebalancing between the heaviest and lightest workers.
+    """Pairwise rebalancing between the slowest- and fastest-finishing
+    workers.
 
-    Each round considers every single-item *move* (heaviest -> lightest) and
+    Each round considers every single-item *move* (slowest -> fastest) and
     every item *swap* between the two, applies the exchange that minimizes
-    the pair's new maximum, and stops when no exchange improves it.  By
-    construction the makespan is monotonically non-increasing, so the
-    refined assignment is never worse than its LPT seed.  Workers are never
-    emptied (a move requires the donor to keep >= 1 item).
+    the pair's new maximum finish time, and stops when no exchange improves
+    it.  By construction the makespan is monotonically non-increasing, so
+    the refined assignment is never worse than its LPT seed.  Workers are
+    never emptied (a move requires the donor to keep >= 1 item).  With
+    ``capacities`` finish times are capacity-weighted (``total / cap``);
+    uniform capacities reduce to the classic load-balance pass.
     """
     groups = [list(g) for g in assignment]
     totals = [sum(loads[i] for i in g) for g in groups]
+    caps = (
+        [float(c) for c in capacities]
+        if capacities is not None
+        else [1.0] * len(groups)
+    )
     for _ in range(max_rounds):
-        hi = max(range(len(groups)), key=totals.__getitem__)
-        lo = min(range(len(groups)), key=totals.__getitem__)
-        if not _apply_best_exchange(loads, groups, totals, hi, lo, eps):
+        hi = max(range(len(groups)), key=lambda r: totals[r] / caps[r])
+        lo = min(range(len(groups)), key=lambda r: totals[r] / caps[r])
+        if not _apply_best_exchange(
+            loads, groups, totals, hi, lo, eps, capacities
+        ):
             break
     return groups
 
@@ -256,6 +301,7 @@ def refine_fixed_rounds(
     rounds: int,
     seed_bytes: bytes,
     eps: float = 1e-12,
+    capacities: Sequence[float] | None = None,
 ) -> list[list[int]]:
     """Exactly ``rounds`` exchange rounds — a pure function of its inputs.
 
@@ -275,17 +321,24 @@ def refine_fixed_rounds(
     groups = [list(g) for g in assignment]
     totals = [sum(loads[i] for i in g) for g in groups]
     n = len(groups)
+    caps = (
+        [float(c) for c in capacities]
+        if capacities is not None
+        else [1.0] * n
+    )
     for _ in range(rounds):
-        hi = max(range(n), key=totals.__getitem__)
-        lo = min(range(n), key=totals.__getitem__)
-        if _apply_best_exchange(loads, groups, totals, hi, lo, eps):
+        hi = max(range(n), key=lambda r: totals[r] / caps[r])
+        lo = min(range(n), key=lambda r: totals[r] / caps[r])
+        if _apply_best_exchange(
+            loads, groups, totals, hi, lo, eps, capacities
+        ):
             continue
         if n <= 2:
             continue  # greedy pair is the only pair: nothing left to try
         a, b = (int(x) for x in rng.choice(n, size=2, replace=False))
-        if totals[a] < totals[b]:
+        if totals[a] / caps[a] < totals[b] / caps[b]:
             a, b = b, a
-        _apply_best_exchange(loads, groups, totals, a, b, eps)
+        _apply_best_exchange(loads, groups, totals, a, b, eps, capacities)
     return groups
 
 
@@ -399,10 +452,14 @@ class PlanRefiner:
                 seed.assignments,
                 rounds=self.rounds,
                 seed_bytes=seed.digest(),
+                capacities=seed.capacities,
             )
         else:
             groups = refine_swaps(
-                seed.loads, seed.assignments, max_rounds=self._max_rounds
+                seed.loads,
+                seed.assignments,
+                max_rounds=self._max_rounds,
+                capacities=seed.capacities,
             )
         return dataclasses.replace(
             seed,
@@ -438,20 +495,117 @@ def assign_pool(
     n_workers: int,
     strategy: str,
     rng: np.random.Generator | None = None,
+    capacities: Sequence[float] | None = None,
 ) -> list[list[int]]:
-    """Pack one pool of microbatch loads across workers per ``strategy``."""
+    """Pack one pool of microbatch loads across workers per ``strategy``.
+
+    ``capacities`` weights lpt/knapsack packing by per-worker speed; the
+    ``random`` baseline deliberately ignores it (that is the uniform
+    strawman the mixed-fleet bench measures against)."""
     if strategy == "random":
         if rng is None:
             raise ValueError("random dispatch needs an rng")
         return assign_random(len(loads), n_workers, rng)
     if strategy == "lpt":
-        return assign_lpt(loads, n_workers)
+        return assign_lpt(loads, n_workers, capacities)
     if strategy == "knapsack":
-        return refine_swaps(loads, assign_lpt(loads, n_workers))
+        return refine_swaps(
+            loads, assign_lpt(loads, n_workers, capacities),
+            capacities=capacities,
+        )
     raise ValueError(
         f"unknown dispatch strategy {strategy!r}; expected one of "
         f"{DISPATCH_STRATEGIES}"
     )
+
+
+def partition_contiguous(
+    loads: Sequence[float],
+    n_groups: int,
+    capacities: Sequence[float] | None = None,
+) -> list[list[int]]:
+    """Optimal *order-preserving* partition of ``loads`` into ``n_groups``
+    contiguous, non-empty groups minimizing the max per-group finish time
+    (group sum over the group's capacity).
+
+    Contiguity is the point: the elastic remap path merges a fixed-width
+    logical fan-out onto fewer physical ranks, and rank-major pool
+    enumeration order — which the engines' gradient RNG
+    (``fold_in(step_key, pool_index)``) depends on — survives exactly when
+    logical shares are grouped contiguously.  Small inputs (logical width
+    x pool size), so the O(n_groups * n^2) DP is exact and cheap."""
+    n = len(loads)
+    if n_groups < 1:
+        raise ValueError("n_groups must be >= 1")
+    if n < n_groups:
+        raise ValueError(
+            f"cannot split {n} items into {n_groups} non-empty groups"
+        )
+    caps = (
+        [float(c) for c in capacities]
+        if capacities is not None
+        else [1.0] * n_groups
+    )
+    if len(caps) != n_groups:
+        raise ValueError(f"{len(caps)} capacities for {n_groups} groups")
+    if any(c <= 0 for c in caps):
+        raise ValueError("group capacities must be positive")
+    prefix = [0.0]
+    for x in loads:
+        prefix.append(prefix[-1] + float(x))
+    inf = float("inf")
+    # best[k][i]: min over splits of max finish time placing the first i
+    # items into the first k groups; cut[k][i] reconstructs the partition
+    best = [[inf] * (n + 1) for _ in range(n_groups + 1)]
+    cut = [[0] * (n + 1) for _ in range(n_groups + 1)]
+    best[0][0] = 0.0
+    for k in range(1, n_groups + 1):
+        for i in range(k, n - (n_groups - k) + 1):
+            for j in range(k - 1, i):
+                if best[k - 1][j] == inf:
+                    continue
+                cand = max(
+                    best[k - 1][j],
+                    (prefix[i] - prefix[j]) / caps[k - 1],
+                )
+                if cand < best[k][i]:
+                    best[k][i], cut[k][i] = cand, j
+    bounds = [n]
+    for k in range(n_groups, 0, -1):
+        bounds.append(cut[k][bounds[-1]])
+    bounds.reverse()
+    return [
+        list(range(bounds[k], bounds[k + 1])) for k in range(n_groups)
+    ]
+
+
+def group_worker_steps(
+    worker_steps: Sequence[Sequence],
+    n_physical: int,
+    capacities: Sequence[float] | None = None,
+) -> list[list]:
+    """Remap a fixed-width logical fan-out onto ``n_physical`` ranks.
+
+    Logical shares are merged *contiguously* (see
+    :func:`partition_contiguous`) so the flattened microbatch order — and
+    therefore every microbatch's pool index, gradient RNG stream, and the
+    step's pool-mean update — is byte-identical to running the logical
+    fan-out directly.  This is what lets a kill-then-rejoin churn run
+    replay the same deterministic plan stream (and digests) as an
+    uninterrupted run while physical capacity comes and goes underneath
+    it.  Shares are weighted by their token counts; ``capacities`` weights
+    the physical ranks (a slow rank gets fewer logical shares)."""
+    shares = [list(s) for s in worker_steps]
+    if n_physical >= len(shares):
+        return shares
+    share_loads = [
+        sum(float(getattr(b, "tokens", 1)) for b, _ in share) or 1.0
+        for share in shares
+    ]
+    groups = partition_contiguous(share_loads, n_physical, capacities)
+    return [
+        [item for idx in group for item in shares[idx]] for group in groups
+    ]
 
 
 class StepPlanner:
@@ -462,6 +616,12 @@ class StepPlanner:
     (and every rank can get >= 1 microbatch), then pack the pool across
     ranks by ``load_of`` (defaults to ``budget_of``; pass the fitted
     ``B*S^p`` load when the pool budget is token-denominated).
+
+    ``capacities`` (per-rank relative speeds; from the scheduler's
+    telemetry on a heterogeneous fleet) scales both sides: the cluster
+    budget becomes ``budget * sum(capacities)`` — a half-speed rank only
+    buys half a rank's worth of pool — and lpt/knapsack pack against
+    weighted finish times so fast ranks absorb the heavy microbatches.
     """
 
     def __init__(
@@ -478,6 +638,7 @@ class StepPlanner:
         overlap: bool = False,
         deterministic_refine: bool = False,
         refine_rounds: int = 16,
+        capacities: Sequence[float] | None = None,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -495,6 +656,7 @@ class StepPlanner:
         self.budget = float(budget)
         self.budget_of = budget_of
         self.load_of = load_of if load_of is not None else budget_of
+        self._capacities = self._checked_capacities(capacities, n_workers)
         # overlapped knapsack refinement: plan_async() returns the LPT seed
         # and runs the swap passes on a PlanRefiner thread (spawned lazily
         # so plain synchronous planners never start one).  deterministic
@@ -514,11 +676,33 @@ class StepPlanner:
         self._probs = normalized_weights(buckets, weights)
         self._buckets = buckets
 
+    @staticmethod
+    def _checked_capacities(
+        capacities: Sequence[float] | None, n_workers: int
+    ) -> tuple[float, ...] | None:
+        if capacities is None:
+            return None
+        caps = tuple(float(c) for c in capacities)
+        if len(caps) != n_workers:
+            raise ValueError(
+                f"{len(caps)} capacities for {n_workers} workers"
+            )
+        if any(c <= 0 for c in caps):
+            raise ValueError("worker capacities must be positive")
+        return caps
+
     @property
     def buckets(self) -> list[Bucket]:
         """The current bucket table (snapshot)."""
         with self._lock:
             return list(self._buckets)
+
+    @property
+    def capacities(self) -> tuple[float, ...] | None:
+        """Per-rank capacity vector plans are packed against (None =
+        uniform fleet)."""
+        with self._lock:
+            return self._capacities
 
     # -- closed-loop / elastic updates ---------------------------------------
 
@@ -535,9 +719,16 @@ class StepPlanner:
         overlap: bool | None = None,
         deterministic_refine: bool | None = None,
         refine_rounds: int | None = None,
+        capacities: Sequence[float] | None = _UNSET,
     ) -> None:
         """Swap any part of the plan mid-training (scheduler replans,
-        elastic resizes) without draining the pipeline."""
+        elastic resizes) without draining the pipeline.
+
+        ``capacities`` follows set-if-passed semantics: omit to keep the
+        current vector, pass an explicit ``None`` to return to a uniform
+        fleet.  An elastic ``n_workers`` change drops a stale vector of
+        the wrong width (per-rank identities do not survive renumbering)
+        unless a matching one is passed in the same call."""
         stale_refiner: PlanRefiner | None = None
         with self._lock:
             if overlap is not None:
@@ -561,6 +752,15 @@ class StepPlanner:
                 if n_workers < 1:
                     raise ValueError("n_workers must be >= 1")
                 self.n_workers = n_workers
+            if capacities is not _UNSET:
+                self._capacities = self._checked_capacities(
+                    capacities, self.n_workers
+                )
+            elif (
+                self._capacities is not None
+                and len(self._capacities) != self.n_workers
+            ):
+                self._capacities = None
             if budget is not None:
                 if budget <= 0:
                     raise ValueError("budget must be positive")
@@ -588,7 +788,13 @@ class StepPlanner:
             budget_of = self.budget_of
             external = rng is not None
             rng = rng if external else self._rng
-            cluster_budget = n_workers * budget
+            # capacity-weighted fleets buy pool in proportion to their
+            # aggregate speed (uniform: sum == n_workers, the classic)
+            cluster_budget = budget * (
+                sum(self._capacities)
+                if self._capacities is not None
+                else n_workers
+            )
             pool: list[Bucket] = []
             acc = 0.0
             while acc < cluster_budget or len(pool) < n_workers:
@@ -609,12 +815,14 @@ class StepPlanner:
             assignment = assign_pool(
                 loads, self.n_workers, self.strategy,
                 rng if rng is not None else self._rng,
+                self._capacities,
             )
             return StepPlan(
                 microbatches=tuple(pool),
                 assignments=tuple(tuple(g) for g in assignment),
                 loads=tuple(loads),
                 strategy=self.strategy,
+                capacities=self._capacities,
             )
 
     def plan(self) -> StepPlan:
@@ -642,10 +850,14 @@ class StepPlanner:
                 seed = StepPlan(
                     microbatches=tuple(pool),
                     assignments=tuple(
-                        tuple(g) for g in assign_lpt(loads, self.n_workers)
+                        tuple(g)
+                        for g in assign_lpt(
+                            loads, self.n_workers, self._capacities
+                        )
                     ),
                     loads=tuple(loads),
                     strategy="lpt",
+                    capacities=self._capacities,
                 )
                 if self._refiner is None:
                     self._refiner = PlanRefiner(
@@ -677,6 +889,11 @@ class StepPlanner:
                 "overlap": self.overlap,
                 "deterministic_refine": self.deterministic_refine,
                 "refine_rounds": self.refine_rounds,
+                "capacities": (
+                    list(self._capacities)
+                    if self._capacities is not None
+                    else None
+                ),
             }
 
     def load_state_dict(self, sd: dict) -> None:
@@ -695,6 +912,10 @@ class StepPlanner:
             self.overlap = bool(sd["overlap"])
             self.deterministic_refine = bool(sd["deterministic_refine"])
             self.refine_rounds = int(sd["refine_rounds"])
+            # absent in pre-capacity checkpoints -> uniform fleet
+            self._capacities = self._checked_capacities(
+                sd.get("capacities"), self.n_workers
+            )
             # an already-spawned refiner was built for the pre-restore
             # mode; retire it (plan_async lazily respawns a matching one)
             # or post-restore tickets would adopt with the OLD rules and
@@ -732,9 +953,11 @@ __all__ = [
     "StepPlan",
     "StepPlanner",
     "assign_pool",
+    "group_worker_steps",
     "makespan",
     "microbatch_key",
     "normalized_weights",
+    "partition_contiguous",
     "plan_digest",
     "refine_fixed_rounds",
     "refine_swaps",

@@ -52,8 +52,21 @@ class SchedulerConfig:
     # every killed-and-resumed run) dispatches identically
     deterministic_refine: bool = False
     refine_rounds: int = 16
+    # heterogeneous-rank capacity planning: estimate per-rank relative
+    # speeds from the same shape-normalized telemetry the straggler
+    # detector uses and feed the vector into the attached StepPlanner, so
+    # lpt/knapsack pack against weighted finish times (fast ranks get the
+    # heavy packed windows) instead of assuming identical devices.
+    # Off by default: uniform fleets keep byte-identical plan streams.
+    capacity_planning: bool = False
+    capacity_floor: float = 0.25  # clip speeds to [floor, 1/floor]
+    capacity_tol: float = 0.10  # hysteresis: replan only on a bigger shift
 
     def __post_init__(self) -> None:
+        if not 0.0 < self.capacity_floor <= 1.0:
+            raise ValueError("capacity_floor must be in (0, 1]")
+        if self.capacity_tol < 0:
+            raise ValueError("capacity_tol must be >= 0")
         if self.dispatch not in DISPATCH_STRATEGIES:
             raise ValueError(
                 f"unknown dispatch strategy {self.dispatch!r}; expected one "
@@ -102,6 +115,7 @@ class AdaptiveLoadScheduler:
         self.n_workers = n_workers
         self.model = initial_model
         self._derate = 1.0
+        self._capacities: list[float] | None = None
         self.updates: list[PlanUpdate] = []
         self._steps_seen = 0
         self.planner: StepPlanner | None = None
@@ -134,7 +148,15 @@ class AdaptiveLoadScheduler:
                 budget=self.policy.m_comp * self._planner_accumulation,
                 budget_of=lambda b: b.load(p),
                 n_workers=self.n_workers,
+                capacities=self._capacities_for(self.n_workers),
             )
+
+    def _capacities_for(self, n_workers: int) -> list[float] | None:
+        """The capacity vector to push with a replan — only if it still
+        matches the fleet width (rank identities do not survive resizes)."""
+        if self._capacities is not None and len(self._capacities) == n_workers:
+            return self._capacities
+        return None
 
     def make_planner(
         self, *, seed: int = 0, accumulation: float = 1.0
@@ -158,6 +180,7 @@ class AdaptiveLoadScheduler:
             overlap=self.config.overlap_refine,
             deterministic_refine=self.config.deterministic_refine,
             refine_rounds=self.config.refine_rounds,
+            capacities=self._capacities_for(self.n_workers),
         )
         return self.planner
 
@@ -173,6 +196,8 @@ class AdaptiveLoadScheduler:
         ):
             self._maybe_refit()
         self._check_stragglers()
+        if self.config.capacity_planning:
+            self._check_capacities()
 
     def _maybe_refit(self) -> None:
         samples = self.telemetry.bench_samples()
@@ -207,6 +232,33 @@ class AdaptiveLoadScheduler:
             self._derate = 1.0
             self._replan(self._steps_seen, self.model, "straggler cleared")
 
+    def _check_capacities(self) -> None:
+        """Estimate per-rank capacities from telemetry and push them into
+        the planner when they shift materially (hysteresis, like the refit
+        path — capacity thrash would churn the plan stream for nothing)."""
+        speeds = self.telemetry.worker_speeds()
+        if len(speeds) < self.n_workers:
+            return  # capacity map incomplete: keep the current vector
+        floor = self.config.capacity_floor
+        caps = [
+            min(max(speeds.get(w, 1.0), floor), 1.0 / floor)
+            for w in range(self.n_workers)
+        ]
+        mean = sum(caps) / len(caps)
+        caps = [c / mean for c in caps]  # mean 1.0: budget scale unchanged
+        current = self._capacities or [1.0] * self.n_workers
+        shift = max(abs(a - b) / b for a, b in zip(caps, current))
+        if shift < self.config.capacity_tol:
+            return
+        self._capacities = caps
+        self._replan(
+            self._steps_seen,
+            self.model,
+            "capacity replan ("
+            + ", ".join(f"{c:.2f}" for c in caps)
+            + ")",
+        )
+
     # -- run-state checkpointing --------------------------------------------
 
     def state_dict(self) -> dict:
@@ -223,6 +275,7 @@ class AdaptiveLoadScheduler:
             "steps_seen": self._steps_seen,
             "n_workers": self.n_workers,
             "n_updates": len(self.updates),
+            "capacities": self._capacities,
         }
 
     def load_state_dict(self, sd: dict) -> None:
@@ -233,6 +286,8 @@ class AdaptiveLoadScheduler:
         self._derate = float(sd["derate"])
         self._steps_seen = int(sd["steps_seen"])
         self.n_workers = int(sd["n_workers"])
+        caps = sd.get("capacities")  # absent in pre-capacity checkpoints
+        self._capacities = [float(c) for c in caps] if caps else None
         self.policy = self._policy_from_model(self.model)
         self.buckets = self.policy.make_buckets(self.shapes)
         if self.planner is not None:
@@ -242,6 +297,7 @@ class AdaptiveLoadScheduler:
                 budget=self.policy.m_comp * self._planner_accumulation,
                 budget_of=lambda b: b.load(p),
                 n_workers=self.n_workers,
+                capacities=self._capacities_for(self.n_workers),
             )
 
     # -- lifecycle ----------------------------------------------------------
@@ -264,6 +320,9 @@ class AdaptiveLoadScheduler:
             raise ValueError("n_workers must be >= 1")
         old = self.n_workers
         self.n_workers = n_workers
+        # rank identities do not survive renumbering: drop the capacity
+        # vector and let telemetry on the new fleet rebuild it
+        self._capacities = None
         self._replan(self._steps_seen, self.model, f"elastic resize {old}->{n_workers}")
 
     # -- reporting ----------------------------------------------------------

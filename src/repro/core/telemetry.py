@@ -104,9 +104,23 @@ class TelemetryBuffer:
         ~2x threshold - 1.  Leave-one-out medians keep the baseline honest
         at any worker count.  Shapes only one worker has seen are skipped
         (no peer baseline to compare against)."""
-        recent = list(self._records)[-window * 16 :]
-        if not recent:
+        by_worker, med_all = self._worker_ratios(window=window)
+        if med_all is None:
             return []
+        return sorted(
+            w
+            for w, ts in by_worker.items()
+            if len(ts) >= 8 and float(np.median(ts)) > threshold * med_all
+        )
+
+    def _worker_ratios(
+        self, *, window: int
+    ) -> tuple[dict[int, list[float]], float | None]:
+        """Per-worker shape-normalized (leave-one-out) compute-time ratios
+        over the trailing window, plus the all-samples median ratio (None
+        when no shape has peer coverage) — shared by straggler detection
+        and capacity estimation."""
+        recent = list(self._records)[-window * 16 :]
         by_shape_worker: dict[tuple[int, int], dict[int, list[float]]] = {}
         for r in recent:
             by_shape_worker.setdefault((r.batch_size, r.seq_len), {}).setdefault(
@@ -114,7 +128,7 @@ class TelemetryBuffer:
             ).append(r.compute_time)
         by_worker: dict[int, list[float]] = {}
         ratios: list[float] = []
-        for shape, per_worker in by_shape_worker.items():
+        for per_worker in by_shape_worker.values():
             if len(per_worker) < 2:
                 continue  # single-worker shape: no peers to normalize by
             for w, ts in per_worker.items():
@@ -129,15 +143,33 @@ class TelemetryBuffer:
                     by_worker.setdefault(w, []).append(ratio)
                     ratios.append(ratio)
         if not ratios:
-            return []
+            return by_worker, None
         med_all = float(np.median(ratios))
-        if med_all <= 0:
-            return []
-        return sorted(
-            w
-            for w, ts in by_worker.items()
-            if len(ts) >= 8 and float(np.median(ts)) > threshold * med_all
-        )
+        return by_worker, (med_all if med_all > 0 else None)
+
+    def worker_speeds(
+        self, *, window: int = 64, min_samples: int = 8
+    ) -> dict[int, float]:
+        """Per-worker relative speed estimates (1.0 = cluster-typical;
+        0.5 = takes twice as long on the same shapes).
+
+        The inverse of the same shape-normalized leave-one-out ratios the
+        straggler detector uses, so a chaos-injected 2x slowdown shows up
+        as speed 0.5 regardless of which microbatch shapes the rank was
+        dealt.  Workers with fewer than ``min_samples`` normalized samples
+        are omitted — the capacity feed treats an incomplete map as "not
+        yet known" rather than guessing."""
+        by_worker, med_all = self._worker_ratios(window=window)
+        if med_all is None:
+            return {}
+        out: dict[int, float] = {}
+        for w, ts in by_worker.items():
+            if len(ts) < min_samples:
+                continue
+            m = float(np.median(ts))
+            if m > 0:
+                out[w] = med_all / m
+        return out
 
     def bottleneck(self) -> BottleneckReport:
         recs = list(self._records)

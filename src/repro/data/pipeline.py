@@ -305,6 +305,7 @@ class ShardedBucketedLoader:
         overlap: bool = False,
         deterministic_refine: bool = False,
         refine_rounds: int | None = None,
+        capacities: Sequence[float] | None = None,
         resume_state: dict | None = None,
     ):
         self.n_workers = n_workers
@@ -315,11 +316,12 @@ class ShardedBucketedLoader:
             if (weights is not None or budget is not None
                     or budget_of is not None or load_of is not None
                     or strategy is not None or overlap
-                    or deterministic_refine or refine_rounds is not None):
+                    or deterministic_refine or refine_rounds is not None
+                    or capacities is not None):
                 raise ValueError(
                     "pass either planner= or the plan-defining args "
                     "(weights/budget/budget_of/load_of/strategy/overlap/"
-                    "deterministic_refine/refine_rounds), not both"
+                    "deterministic_refine/refine_rounds/capacities), not both"
                 )
             if list(buckets) != planner.buckets:
                 raise ValueError(
@@ -349,6 +351,7 @@ class ShardedBucketedLoader:
                 overlap=overlap,
                 deterministic_refine=deterministic_refine,
                 refine_rounds=refine_rounds if refine_rounds is not None else 16,
+                capacities=capacities,
             )
         self._make_batch = make_batch
         self._rng = np.random.default_rng(seed + 1)
@@ -447,8 +450,11 @@ class ShardedBucketedLoader:
         using the planner's load function + strategy (exactly-once: items
         are moved, never duplicated or dropped)."""
         loads = [float(self._planner.load_of(b)) for b, _ in items]
+        caps = self._planner.capacities
+        if caps is not None and len(caps) != n_workers:
+            caps = None  # capacity vector is for the pre-resize width
         groups = assign_pool(
-            loads, n_workers, self._planner.strategy, self._repack_rng
+            loads, n_workers, self._planner.strategy, self._repack_rng, caps
         )
         return [[items[i] for i in g] for g in groups]
 
@@ -466,11 +472,15 @@ class ShardedBucketedLoader:
                 mbs.append(b)
                 loads.append(float(self._planner.load_of(b)))
             assignments.append(tuple(idxs))
+        caps = self._planner.capacities
+        if caps is not None and len(caps) != len(per_rank):
+            caps = None  # capacity vector is for the pre-resize width
         return StepPlan(
             microbatches=tuple(mbs),
             assignments=tuple(assignments),
             loads=tuple(loads),
             strategy=self._planner.strategy,
+            capacities=caps,
         )
 
     def _adopt_locked(self, n_workers: int) -> None:

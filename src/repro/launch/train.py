@@ -28,10 +28,12 @@ from repro.core.bucketing import BucketingPolicy, DataShape
 from repro.core.dispatch import DISPATCH_STRATEGIES
 from repro.data.pipeline import BucketedLoader, ShardedBucketedLoader
 from repro.data.synthetic import make_diffusion_batch, make_lm_batch
+from repro.distributed.chaos import ChaosSchedule
 from repro.distributed.fault_tolerance import (
     CheckpointCadence,
     FaultTolerantRunner,
     HeartbeatMonitor,
+    PreemptionNotice,
 )
 from repro.launch.mesh import make_data_mesh
 from repro.optim.adamw import OptimizerConfig
@@ -82,6 +84,21 @@ def main() -> None:
                          "(requires --overlap)")
     ap.add_argument("--refine-rounds", type=int, default=16,
                     help="exchange rounds for --deterministic-refine")
+    ap.add_argument("--elastic", default="remap", choices=("remap", "replan"),
+                    help="how rank-count changes (failures, joins) land: "
+                         "'remap' keeps the plan stream at its logical "
+                         "width and contiguously regroups shares onto the "
+                         "surviving physical ranks (digest-stable under "
+                         "churn); 'replan' resizes the loader itself "
+                         "(plans re-packed for the new width)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection, e.g. "
+                         "'kill@4:2,3;join@8:2;preempt@12' (see "
+                         "repro.distributed.chaos)")
+    ap.add_argument("--preempt-flag", default=None, metavar="PATH",
+                    help="poll this path each step; its appearance (or "
+                         "SIGTERM) triggers a graceful preemption: full "
+                         "run-state save, then clean exit")
     args = ap.parse_args()
     if args.workers > 1 and not args.adaptive:
         ap.error("--workers > 1 requires --adaptive (the fixed-shape stream "
@@ -101,6 +118,9 @@ def main() -> None:
     if args.resume and args.overlap and not args.deterministic_refine:
         ap.error("--resume with --overlap needs --deterministic-refine: "
                  "wall-clock adoption makes the plan stream unreplayable")
+    if args.chaos and not (args.adaptive and args.workers > 1):
+        ap.error("--chaos injects rank-level faults; pass --adaptive "
+                 "--workers N (N > 1)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -190,15 +210,27 @@ def main() -> None:
             return {"loader": loader.state_dict(rewind=held)}
         return {}
 
+    preemption = PreemptionNotice(flag_file=args.preempt_flag)
+    preemption.install_signal_handler()
     ft = FaultTolerantRunner(
         ckpt_dir=args.ckpt_dir,
         cadence=CheckpointCadence(ckpt_cost_s=0.5, mtbf_s=3600.0,
                                   min_interval_steps=args.ckpt_every),
         monitor=HeartbeatMonitor(n_workers=args.workers, timeout_s=1e9),
         keep=args.keep,
+        preemption=preemption,
     )
+    chaos = ChaosSchedule.from_spec(args.chaos) if args.chaos else None
     mesh = make_data_mesh(args.workers) if args.mesh else None
-    trainer = Trainer(cfg, opt, ft=ft, mesh=mesh, run_state_of=run_state_of)
+    trainer = Trainer(cfg, opt, ft=ft, mesh=mesh, run_state_of=run_state_of,
+                      chaos=chaos)
+    if args.elastic == "remap":
+        # plan stream stays at logical width --workers; rank changes only
+        # regroup shares onto the surviving/grown physical fleet, so the
+        # consumed digest stream is byte-identical under churn
+        ft.on_resize = trainer.set_physical_ranks
+    elif isinstance(loader, ShardedBucketedLoader):
+        ft.on_resize = loader.resize
     trainer_rng = (
         deserialize_rng_key(run_state["trainer"]["rng"])
         if run_state is not None else jax.random.PRNGKey(1)
@@ -207,6 +239,7 @@ def main() -> None:
         state, data_iter, n_run, rng=trainer_rng, start_step=start,
         log_every=10,
     )
+    n_done = len(hist.losses)  # < n_run when a preemption broke the loop
     if args.digest_log and isinstance(loader, ShardedBucketedLoader):
         # the consumed prefix of the emitted plan stream, one step per line
         # (the producer runs ahead by the prefetch depth; those plans
@@ -216,12 +249,21 @@ def main() -> None:
         # truncate, or stale digests from an earlier attempt poison the
         # parity comparison
         with open(args.digest_log, "a" if start > 0 else "w") as f:
-            for p in loader.plans[:n_run]:
+            for p in loader.plans[:n_done]:
                 f.write(p.digest().hex() + "\n")
-        print(f"plan digests for steps {start}..{start + n_run - 1} -> "
+        print(f"plan digests for steps {start}..{start + n_done - 1} -> "
               f"{args.digest_log}")
     if buckets is not None:
         loader.close()
+    if hist.preempted:
+        # the runner already saved weights + run state inside the grace
+        # window; a second save here would advance past the handoff point
+        print(
+            f"preempted after step {start + n_done - 1}: run state saved, "
+            f"resume with --resume to train the remaining "
+            f"{args.steps - start - n_done} steps"
+        )
+        return
     print(
         f"done: {n_run} steps ({start}..{args.steps - 1}), "
         f"final loss {hist.losses[-1]:.4f}, "

@@ -91,6 +91,13 @@ class ExecutionEngine:
         engine whose collective completed heard from all of them)."""
         return list(getattr(self, "_last_ranks", []))
 
+    def set_time_scale(self, worker: int, scale: float) -> None:
+        """Scale rank ``worker``'s *recorded* compute times from now on —
+        the chaos harness's slowdown injection point: a degraded device
+        shows up in telemetry (and trips the scheduler's straggler /
+        capacity paths) without needing degradable hardware.  Engines
+        without per-rank telemetry ignore it."""
+
 
 class EmulatedEngine(ExecutionEngine):
     """Single-host emulation: every DP rank's microbatches run serially on
@@ -142,6 +149,11 @@ class EmulatedEngine(ExecutionEngine):
         )
         self._seen_signatures: set = set()
         self._records: list[WorkerStepRecord] = []
+
+    def set_time_scale(self, worker: int, scale: float) -> None:
+        if scale <= 0:
+            raise ValueError("time scale must be positive")
+        self._worker_time_scale[int(worker)] = float(scale)
 
     def place_state(self, state):
         if not self._donate:
@@ -249,13 +261,18 @@ class MeshEngine(ExecutionEngine):
         self.async_dispatch = measure != "serial"
         self._measure = measure
         self._check_agreement = check_agreement
-        scale = dict(worker_time_scale or {})
+        self._scale = dict(worker_time_scale or {})
         self._time_scale: Callable[[int], float] = (
-            lambda w: scale.get(w, 1.0)
+            lambda w: self._scale.get(w, 1.0)
         )
         self._records: list[WorkerStepRecord] = []
         self._timers = None
         self._rank_times: list[float] | None = None
+
+    def set_time_scale(self, worker: int, scale: float) -> None:
+        if scale <= 0:
+            raise ValueError("time scale must be positive")
+        self._scale[int(worker)] = float(scale)
 
     def place_state(self, state):
         if self.executor.is_placed(state):

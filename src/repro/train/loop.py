@@ -56,8 +56,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import group_worker_steps
 from repro.core.scheduler import AdaptiveLoadScheduler
 from repro.data.pipeline import SnapshotUnavailable
+from repro.distributed.chaos import ChaosContext, ChaosSchedule
 from repro.distributed.fault_tolerance import FaultTolerantRunner
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig
@@ -90,6 +92,9 @@ class TrainHistory:
     # compile-polluted samples would understate steady-state tok/s exactly
     # the way they used to poison the telemetry refit
     compile_steps: list[int] = dataclasses.field(default_factory=list)
+    #: True iff the run ended early on a graceful-preemption drain (the
+    #: handoff checkpoint is already on disk; relaunch with resume)
+    preempted: bool = False
 
     @property
     def throughput(self) -> float:
@@ -117,12 +122,22 @@ class Trainer:
         check_agreement: bool = False,
         engine: ExecutionEngine | None = None,
         run_state_of: Callable[[int], dict] | None = None,
+        chaos: ChaosSchedule | None = None,
     ):
         self.cfg = cfg
         self.opt = opt
         self.policy = policy
         self.scheduler = scheduler
         self.ft = ft
+        # deterministic chaos injection: events fire at the plan boundary
+        # after each completed step, through the same monitor/runner/engine
+        # hooks a real cluster manager would drive
+        self.chaos = chaos
+        # elastic "remap" mode (set_physical_ranks): the logical fan-out
+        # width stays fixed — churn only regroups logical shares onto the
+        # current physical fleet, keeping the plan stream digest-stable
+        self._n_physical: int | None = None
+        self._physical_caps: list[float] | None = None
         # run_state_of(held) -> dict merged into every checkpoint's
         # run-state blob.  ``held`` is how many data items the driver has
         # popped but not yet executed (the prefetch double-buffer) — a
@@ -154,6 +169,45 @@ class Trainer:
                 cfg, opt, policy=policy, donate=donate,
                 worker_time_scale=worker_time_scale,
             )
+
+    def set_physical_ranks(
+        self, n: int, capacities: Mapping[int, float] | list | None = None
+    ) -> None:
+        """Elastic *remap*: run the fixed-width logical plan stream on
+        ``n`` physical ranks.
+
+        The loader/planner keep drawing at their original logical width —
+        the churn-stable choice: pool sizes, plan digests, and (because
+        logical shares are merged contiguously, preserving rank-major pool
+        enumeration) every microbatch's gradient RNG stay byte-identical
+        to an uninterrupted run.  This is the ``on_resize`` target for
+        kill-then-rejoin churn; permanent capacity changes that should
+        change the plan stream itself use ``loader.resize`` instead.
+
+        ``n`` larger than a fan-out's logical width is clamped to it (a
+        physical rank can hold at minimum one logical share).
+        ``capacities`` optionally weights the physical ranks."""
+        if n < 1:
+            raise ValueError("need at least one physical rank")
+        self._n_physical = int(n)
+        if capacities is None:
+            self._physical_caps = None
+        elif isinstance(capacities, Mapping):
+            self._physical_caps = [
+                float(capacities.get(r, 1.0)) for r in range(n)
+            ]
+        else:
+            caps = [float(c) for c in capacities]
+            if len(caps) != n:
+                raise ValueError(f"{len(caps)} capacities for {n} ranks")
+            self._physical_caps = caps
+
+    def _to_physical(self, worker_steps):
+        """Apply the remap (identity when inactive or already narrower)."""
+        n = self._n_physical
+        if n is None or n >= len(worker_steps):
+            return worker_steps
+        return group_worker_steps(worker_steps, n, self._physical_caps)
 
     @staticmethod
     def _as_worker_steps(step) -> list[list[tuple[Any, Any]]]:
@@ -217,6 +271,7 @@ class Trainer:
             self.ft.note_restored(start_step)
         state = engine.place_state(state)
         item = next(data_iter) if n_steps > 0 else None
+        held = 0
         for i in range(n_steps):
             step_no = start_step + i
             worker_steps = self._as_worker_steps(item)
@@ -227,14 +282,15 @@ class Trainer:
             n_micro = sum(len(ws) for ws in worker_steps)
             rng, sub = jax.random.split(rng)
             state, out = engine.execute_step(
-                state, worker_steps, step_key=sub, step=step_no
+                state, self._to_physical(worker_steps),
+                step_key=sub, step=step_no,
             )
             held = 0
             if engine.async_dispatch and i + 1 < n_steps:
                 # devices are still computing step i: fetch step i+1 and
                 # stage its H2D transfers behind that compute
                 item = next(data_iter)
-                engine.prepare(self._as_worker_steps(item))
+                engine.prepare(self._to_physical(self._as_worker_steps(item)))
                 held = 1
             recs = engine.timing_records()
             jax.block_until_ready(state["step"])
@@ -250,6 +306,16 @@ class Trainer:
 
             if self.scheduler is not None:
                 self.scheduler.observe(recs)
+
+            if self.chaos is not None:
+                ctx = ChaosContext(
+                    monitor=self.ft.monitor if self.ft else None,
+                    runner=self.ft,
+                    engine=engine,
+                    preemption=self.ft.preemption if self.ft else None,
+                )
+                for msg in self.chaos.fire(step_no, ctx):
+                    hist.events.append(f"{msg}@{step_no}")
 
             if self.ft is not None:
                 # heartbeat BEFORE failure checks: a rank that completed
@@ -280,6 +346,34 @@ class Trainer:
                 )
                 if failure is not None:
                     hist.events.append(f"failure@{step_no}:{failure['plan']}")
+                try:
+                    join = self.ft.handle_joins(
+                        state, step_no + 1, run_state=run_state
+                    )
+                    if join is not None:
+                        hist.events.append(
+                            f"join@{step_no}:{join['joined']}"
+                            f"->{join['plan'].get('data_parallel')}"
+                        )
+                except SnapshotUnavailable:
+                    # mid-drain (a resize just re-emitted the boundary
+                    # plan): the join stays queued and is admitted at the
+                    # next snapshotable boundary
+                    hist.events.append(f"join-deferred@{step_no}")
+                preempt = self.ft.handle_preemption(
+                    state, step_no + 1,
+                    run_state=lambda: self._failure_run_state(  # noqa: B023
+                        step_no + 1, rng, held
+                    ),
+                )
+                for ev in self.ft.drain_events():
+                    hist.events.append(f"{ev}@{step_no}")
+                if preempt is not None:
+                    # grace drain complete: in-flight microbatches done,
+                    # full run state on disk — hand off cleanly
+                    hist.events.append(f"preempt@{step_no}")
+                    hist.preempted = True
+                    break
 
             if not engine.async_dispatch and i + 1 < n_steps:
                 # sync engines fetch AFTER the fault-tolerance block: the
@@ -297,8 +391,11 @@ class Trainer:
                 )
         # degraded variant: an end-of-run loader that cannot snapshot
         # (e.g. a resize still draining) must not crash a finished run —
-        # the launcher then persists weights + trainer RNG
+        # the launcher then persists weights + trainer RNG.  A preempted
+        # run counts only its completed steps, and ``held`` rewinds the
+        # item an async double-buffer already popped for the step that
+        # never ran.
         self.last_run_state = self._failure_run_state(
-            start_step + n_steps, rng, 0
+            start_step + len(hist.losses), rng, held if hist.preempted else 0
         )
         return state, hist

@@ -1,0 +1,616 @@
+"""Elastic capacity under churn (the PR's acceptance gates).
+
+* deterministic chaos injection: spec grammar, seeded schedules, and the
+  hook wiring into monitor/runner/engine/preemption;
+* heartbeat monitor dead-latch: a flapping rank (heartbeat -> timeout ->
+  heartbeat) stays dead until an explicit ``reset``/``join``;
+* graceful preemption: notice channel (event + flag file), grace drain,
+  run-state save, clean handoff;
+* scale-up: ``request_join``/``handle_joins`` — snapshot-first ordering
+  (a join defers when the stream can't snapshot), monitor re-arm, forced
+  full save at the resize boundary;
+* checkpoint-store I/O retries: bounded attempts, jittered backoff, a
+  retry event per attempt, missing-checkpoint NOT retried;
+* heterogeneous ranks: capacity-weighted LPT/refinement, contiguous
+  partition DP, planner capacity plumbing (budget, digest, state dict),
+  scheduler capacity feed from slowdown telemetry;
+* the headline parity: a kill -> join -> preempt -> resume run replays
+  byte-identical plan digests and bit-identical parameters vs an
+  uninterrupted run on the emulated engine (remap elasticity).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.checkpoint import store  # noqa: E402
+from repro.core import (  # noqa: E402
+    AdaptiveLoadScheduler,
+    CostModel,
+    SchedulerConfig,
+    StepPlanner,
+)
+from repro.core.balancer import assign_lpt, makespan  # noqa: E402
+from repro.core.bucketing import BucketingPolicy, DataShape  # noqa: E402
+from repro.core.dispatch import (  # noqa: E402
+    group_worker_steps,
+    partition_contiguous,
+    refine_fixed_rounds,
+)
+from repro.core.telemetry import WorkerStepRecord  # noqa: E402
+from repro.data.pipeline import ShardedBucketedLoader  # noqa: E402
+from repro.data.synthetic import make_lm_batch  # noqa: E402
+from repro.distributed.chaos import (  # noqa: E402
+    ChaosContext,
+    ChaosEvent,
+    ChaosSchedule,
+)
+from repro.distributed.fault_tolerance import (  # noqa: E402
+    CheckpointCadence,
+    FaultTolerantRunner,
+    HeartbeatMonitor,
+    PreemptionNotice,
+)
+from repro.train.engine import EmulatedEngine  # noqa: E402
+from repro.train.loop import Trainer, deserialize_rng_key  # noqa: E402
+from repro.train.steps import init_state  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.optim.adamw import OptimizerConfig  # noqa: E402
+
+CFG = ModelConfig(
+    name="chaos-test", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=1, head_dim=16, d_ff=64, vocab=64, dtype="float32",
+)
+OPT = OptimizerConfig(peak_lr=1e-3, schedule="constant", warmup=0)
+SHAPES = [
+    DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4), DataShape(17, 64, 64, 4)
+]
+BUCKETS = BucketingPolicy(m_mem=2_000, m_comp=3e5, p=2.0).make_buckets(SHAPES)
+LOAD = lambda b: b.load(2.0)  # noqa: E731
+
+
+def _make_batch(rng, bucket):
+    key = jax.random.PRNGKey(int(rng.integers(2**31)))
+    return jax.device_get(
+        make_lm_batch(key, bucket.batch_size, bucket.seq_len, CFG.vocab)
+    )
+
+
+def _loader(n_workers=4, seed=0, resume_state=None, **kw):
+    return ShardedBucketedLoader(
+        BUCKETS, None, _make_batch, n_workers=n_workers, budget=2 * 3e5,
+        budget_of=LOAD, strategy="lpt", seed=seed,
+        resume_state=resume_state, **kw,
+    )
+
+
+def _trainer(loader, ft=None, chaos=None):
+    return Trainer(
+        CFG, OPT, ft=ft, chaos=chaos,
+        run_state_of=lambda held: {"loader": loader.state_dict(rewind=held)},
+    )
+
+
+# -- chaos schedule ------------------------------------------------------------
+
+
+class TestChaosSchedule:
+    def test_spec_round_trip(self):
+        cs = ChaosSchedule.from_spec(
+            "kill@4:2,3; join@8:2; preempt@12; slowdown@2:1x2.5"
+        )
+        kinds = [(e.step, e.kind) for e in cs.events]
+        assert kinds == [
+            (2, "slowdown"), (4, "kill"), (8, "join"), (12, "preempt")
+        ]
+        kill = cs.events_at(4)[0]
+        assert kill.ranks == (2, 3)
+        slow = cs.events_at(2)[0]
+        assert slow.ranks == (1,) and slow.factor == 2.5
+        assert cs.last_step == 12
+        assert cs.events_at(5) == []
+
+    def test_spec_rejects_garbage(self):
+        for bad in ("kill@x:1", "join8:2", "freeze@3", "kill@3", ""):
+            with pytest.raises(ValueError):
+                ChaosSchedule.from_spec(bad)
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            ChaosEvent(step=-1, kind="kill", ranks=(1,))
+        with pytest.raises(ValueError):
+            ChaosEvent(step=1, kind="kill")  # kill needs ranks
+        with pytest.raises(ValueError):
+            ChaosEvent(step=1, kind="slowdown", ranks=(1,), factor=0.0)
+
+    def test_seeded_is_deterministic_and_safe(self):
+        a = ChaosSchedule.seeded(7, n_steps=20, n_workers=4)
+        b = ChaosSchedule.seeded(7, n_steps=20, n_workers=4)
+        c = ChaosSchedule.seeded(8, n_steps=20, n_workers=4)
+        assert [e.describe() for e in a.events] == [
+            e.describe() for e in b.events
+        ]
+        assert [e.describe() for e in a.events] != [
+            e.describe() for e in c.events
+        ]
+        for seed in range(20):
+            cs = ChaosSchedule.seeded(seed, n_steps=20, n_workers=4)
+            for e in cs.events:
+                assert 1 <= e.step < 20
+                if e.kind == "kill":
+                    assert 0 not in e.ranks  # rank 0 is the coordinator
+                    assert len(e.ranks) < 4  # never the whole fleet
+
+    def test_fire_routes_to_hooks(self):
+        monitor = HeartbeatMonitor(4, timeout_s=1e9)
+        ft = FaultTolerantRunner(
+            ckpt_dir="/tmp/unused",
+            cadence=CheckpointCadence(1.0, 1.0, min_interval_steps=100),
+            monitor=monitor,
+        )
+        engine = EmulatedEngine(CFG, OPT)
+        pre = PreemptionNotice()
+        cs = ChaosSchedule.from_spec(
+            "kill@1:3;join@1:2;slowdown@1:1x2.0;preempt@1:5"
+        )
+        ctx = ChaosContext(
+            monitor=monitor, runner=ft, engine=engine, preemption=pre
+        )
+        msgs = cs.fire(1, ctx)
+        assert len(msgs) == 4 and all(m.startswith("chaos:") for m in msgs)
+        assert monitor.dead_workers(time.time()) == [3]
+        assert ft._pending_joins == 2
+        assert engine._worker_time_scale[1] == 2.0
+        assert pre.pending() and pre.grace_s == 5.0
+
+    def test_fire_without_hooks_skips(self):
+        cs = ChaosSchedule.from_spec("kill@1:3")
+        msgs = cs.fire(1, ChaosContext())
+        assert msgs == ["chaos-skipped:kill:3"]
+        assert cs.fire(2, ChaosContext()) == []
+
+
+# -- monitor dead-latch (flapping ranks) ---------------------------------------
+
+
+class TestMonitorLatch:
+    def test_flapping_rank_stays_dead_until_reset(self):
+        m = HeartbeatMonitor(3, timeout_s=5.0)
+        t0 = time.time()
+        m.heartbeat(0, t0)
+        m.heartbeat(1, t0)
+        m.heartbeat(2, t0)
+        m.heartbeat(1, t0 + 4.0)  # only rank 1 stays inside the window
+        assert m.dead_workers(t0 + 8.0) == [0, 2]
+        # the NIC comes back and the flapping ranks heartbeat again —
+        # they must stay latched dead (split-brain prevention)
+        m.heartbeat(0, t0 + 8.5)
+        m.heartbeat(2, t0 + 8.5)
+        assert m.dead_workers(t0 + 9.0) == [0, 2]
+        assert m.alive() == 1
+        m.reset(3)
+        assert m.dead_workers(time.time() + 1.0) == []
+
+    def test_join_revives_a_latched_rank(self):
+        m = HeartbeatMonitor(2, timeout_s=5.0)
+        t0 = time.time()
+        m.mark_dead(1)
+        assert m.dead_workers(t0) == [1]
+        m.heartbeat(1, t0)  # latched: plain heartbeats don't revive
+        assert m.dead_workers(t0) == [1]
+        m.join(1, t0)
+        assert m.dead_workers(t0 + 1.0) == []
+
+
+# -- preemption notice ---------------------------------------------------------
+
+
+class TestPreemptionNotice:
+    def test_event_channel(self):
+        p = PreemptionNotice()
+        assert not p.pending()
+        p.notify(grace_s=7.0)
+        assert p.pending() and p.grace_s == 7.0
+        p.clear()
+        assert not p.pending()
+
+    def test_flag_file_channel(self, tmp_path):
+        flag = tmp_path / "preempt.flag"
+        p = PreemptionNotice(flag_file=str(flag))
+        assert not p.pending()
+        flag.write_text("")
+        assert p.pending()
+
+    def test_handle_preemption_saves_run_state(self, tmp_path):
+        p = PreemptionNotice()
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1.0, 1.0, min_interval_steps=100),
+            monitor=HeartbeatMonitor(2, timeout_s=1e9),
+            preemption=p,
+        )
+        state = {"w": np.ones(3, np.float32)}
+        assert ft.handle_preemption(state, 5, run_state={"step": 5}) is None
+        p.notify(grace_s=3.0)
+        out = ft.handle_preemption(state, 5, run_state={"step": 5})
+        assert out == {"step": 5, "grace_s": 3.0}
+        assert store.load_run_state(str(tmp_path)) == {"step": 5}
+
+
+# -- scale-up (join) -----------------------------------------------------------
+
+
+class TestJoins:
+    def _runner(self, tmp_path, n=2):
+        return FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1.0, 1.0, min_interval_steps=100),
+            monitor=HeartbeatMonitor(n, timeout_s=1e9),
+        )
+
+    def test_join_resizes_up_and_saves(self, tmp_path):
+        ft = self._runner(tmp_path, n=2)
+        sizes = []
+        ft.on_resize = sizes.append
+        assert ft.request_join(2) == 2
+        state = {"w": np.ones(3, np.float32)}
+        out = ft.handle_joins(state, 4, run_state={"step": 4})
+        assert out["joined"] == 2 and out["plan"]["data_parallel"] == 4
+        assert sizes == [4]
+        assert len(ft.monitor.workers) == 4
+        assert store.load_run_state(str(tmp_path)) == {"step": 4}
+        # the queue drained; a later boundary does nothing
+        assert ft.handle_joins(state, 5, run_state={"step": 5}) is None
+
+    def test_join_defers_until_stream_can_snapshot(self, tmp_path):
+        from repro.data.pipeline import SnapshotUnavailable
+
+        ft = self._runner(tmp_path, n=2)
+        ft.on_resize = lambda n: None
+        ft.request_join(1)
+
+        def bad_run_state():
+            raise SnapshotUnavailable("resize re-emitted this plan")
+
+        with pytest.raises(SnapshotUnavailable):
+            ft.handle_joins({"w": np.ones(2)}, 3, run_state=bad_run_state)
+        # nothing consumed: the join fires at the NEXT boundary
+        out = ft.handle_joins({"w": np.ones(2)}, 4, run_state={"step": 4})
+        assert out["joined"] == 1
+
+    def test_join_without_resize_hook_reports_zero(self, tmp_path):
+        ft = self._runner(tmp_path, n=2)
+        ft.request_join(1)
+        out = ft.handle_joins({"w": np.ones(2)}, 3, run_state={"step": 3})
+        assert out["joined"] == 0 and out["requested"] == 1
+
+    def test_resize_boundary_forces_full_snapshot(self, tmp_path):
+        # satellite (a): after ANY resize the next checkpoint must be a
+        # full run-state snapshot even if the cadence says "not yet" —
+        # otherwise a crash in the churn window replays from a stale plan
+        ft = self._runner(tmp_path, n=4)
+        ft.on_resize = lambda n: None
+        ft.monitor.mark_dead(3)
+        state = {"w": np.ones(3, np.float32)}
+        ft.handle_failures(state, 2, run_state={"step": 2})
+        assert ft._force_full_save
+        saved = ft.maybe_checkpoint(state, 3, 0.1, run_state={"step": 3})
+        assert saved and store.load_run_state(str(tmp_path)) == {"step": 3}
+        # consumed: the next boundary obeys the cadence again
+        assert not ft.maybe_checkpoint(state, 4, 0.1, run_state={"step": 4})
+
+
+# -- checkpoint-store retries --------------------------------------------------
+
+
+class TestStoreRetries:
+    def test_save_retries_transient_os_errors(self, tmp_path, monkeypatch):
+        import os as _os
+
+        real_replace = _os.replace
+        fails = {"n": 2}
+
+        def flaky(src, dst):
+            if fails["n"] > 0:
+                fails["n"] -= 1
+                raise OSError("transient")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr("repro.checkpoint.store.os.replace", flaky)
+        seen = []
+        state = {"w": np.arange(4, dtype=np.float32)}
+        store.save(state, 1, str(tmp_path), backoff_s=0.0,
+                   on_retry=lambda a, e: seen.append(a))
+        assert seen == [1, 2]
+        out = store.restore(str(tmp_path), {"w": np.zeros(4, np.float32)})
+        np.testing.assert_array_equal(out["w"], state["w"])
+
+    def test_save_gives_up_after_max_attempts(self, tmp_path, monkeypatch):
+        def always_fails(src, dst):
+            raise OSError("disk on fire")
+
+        monkeypatch.setattr("repro.checkpoint.store.os.replace", always_fails)
+        with pytest.raises(OSError, match="disk on fire"):
+            store.save({"w": np.ones(2, np.float32)}, 1, str(tmp_path),
+                       max_attempts=3, backoff_s=0.0)
+
+    def test_missing_checkpoint_is_not_retried(self, tmp_path):
+        calls = []
+        with pytest.raises(FileNotFoundError):
+            store.restore(str(tmp_path / "nope"), {"w": np.zeros(2)},
+                          on_retry=lambda a, e: calls.append(a))
+        assert calls == []  # a missing checkpoint is an answer, not a flake
+
+    def test_runner_records_retry_events(self, tmp_path, monkeypatch):
+        import os as _os
+
+        real_replace = _os.replace
+        fails = {"n": 1}
+
+        def flaky(src, dst):
+            if fails["n"] > 0:
+                fails["n"] -= 1
+                raise OSError("transient")
+            return real_replace(src, dst)
+
+        monkeypatch.setattr("repro.checkpoint.store.os.replace", flaky)
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1e-9, 1e-9, min_interval_steps=1),
+            monitor=HeartbeatMonitor(2, timeout_s=1e9),
+        )
+        assert ft.maybe_checkpoint({"w": np.ones(2, np.float32)}, 5, 0.1,
+                                   run_state={"step": 5})
+        assert ft.drain_events() == ["ckpt-retry#1:OSError"]
+        assert ft.drain_events() == []
+
+
+# -- heterogeneous capacity packing --------------------------------------------
+
+
+class TestCapacityPacking:
+    def test_weighted_lpt_beats_uniform_on_mixed_fleet(self):
+        rng = np.random.default_rng(0)
+        loads = list(rng.uniform(1.0, 10.0, size=24))
+        caps = [1.0, 1.0, 0.5, 0.5]
+        uni = makespan(loads, assign_lpt(loads, 4), caps)
+        wtd = makespan(loads, assign_lpt(loads, 4, caps), caps)
+        assert wtd < uni
+
+    def test_uniform_capacities_reduce_to_classic(self):
+        rng = np.random.default_rng(1)
+        loads = list(rng.uniform(1.0, 10.0, size=17))
+        assert assign_lpt(loads, 4) == assign_lpt(loads, 4, [1.0] * 4)
+
+    def test_weighted_refine_never_worsens(self):
+        rng = np.random.default_rng(2)
+        loads = list(rng.uniform(1.0, 10.0, size=20))
+        caps = [1.0, 0.7, 0.5, 0.25]
+        seed = assign_lpt(loads, 4, caps)
+        refined = refine_fixed_rounds(loads, seed, rounds=16,
+                                      seed_bytes=b"chaos-test",
+                                      capacities=caps)
+        assert makespan(loads, refined, caps) <= makespan(loads, seed, caps)
+
+    def test_partition_contiguous_is_optimal(self):
+        rng = np.random.default_rng(3)
+        loads = list(rng.uniform(1.0, 9.0, size=9))
+        caps = [1.0, 0.5, 1.0]
+        groups = partition_contiguous(loads, 3, caps)
+        # order-preserving, exactly-once
+        assert [i for g in groups for i in g] == list(range(9))
+        got = makespan(loads, groups, caps)
+        # brute-force all contiguous 3-partitions
+        best = np.inf
+        for c1 in range(1, 8):
+            for c2 in range(c1 + 1, 9):
+                parts = [list(range(c1)), list(range(c1, c2)),
+                         list(range(c2, 9))]
+                best = min(best, makespan(loads, parts, caps))
+        assert got == pytest.approx(best)
+
+    def test_group_worker_steps_is_contiguous(self):
+        class _B:
+            def __init__(self, tokens):
+                self.tokens = tokens
+
+        ws = [[(_B(4), {"i": i})] for i in range(4)]
+        merged = group_worker_steps(ws, 2)
+        assert len(merged) == 2
+        flat = [b[1]["i"] for share in merged for b in share]
+        assert flat == [0, 1, 2, 3]  # rank-major pool order preserved
+        # identity when the fleet covers every logical share
+        assert group_worker_steps(ws, 4) == [list(s) for s in ws]
+
+    def test_planner_capacities_scale_budget_and_digest(self):
+        kw = dict(budget=2 * 3e5, budget_of=LOAD, load_of=LOAD,
+                  strategy="lpt", seed=0)
+        uni = StepPlanner(BUCKETS, None, n_workers=4, **kw)
+        het = StepPlanner(BUCKETS, None, n_workers=4,
+                          capacities=[1.0, 1.0, 0.5, 0.5], **kw)
+        p_u, p_h = uni.plan(), het.plan()
+        assert p_u.capacities is None
+        assert p_h.capacities == (1.0, 1.0, 0.5, 0.5)
+        assert p_u.digest() != p_h.digest()
+        # pool scales with total capacity: 3 units vs 4
+        assert sum(p_h.loads) < sum(p_u.loads)
+        # per-rank times are capacity-weighted
+        assert p_h.worker_times() == [
+            t / c for t, c in zip(p_h.worker_loads(), p_h.capacities)
+        ]
+
+    def test_planner_capacities_survive_state_round_trip(self):
+        kw = dict(budget=2 * 3e5, budget_of=LOAD, load_of=LOAD,
+                  strategy="lpt", seed=0)
+        a = StepPlanner(BUCKETS, None, n_workers=4,
+                        capacities=[1.0, 1.0, 0.5, 0.5], **kw)
+        a.plan()
+        b = StepPlanner(BUCKETS, None, n_workers=4, **kw)
+        b.load_state_dict(a.state_dict())
+        assert b.capacities == (1.0, 1.0, 0.5, 0.5)
+        assert a.plan().digest() == b.plan().digest()
+
+    def test_planner_update_drops_stale_capacity_width(self):
+        kw = dict(budget=2 * 3e5, budget_of=LOAD, load_of=LOAD,
+                  strategy="lpt", seed=0)
+        p = StepPlanner(BUCKETS, None, n_workers=4,
+                        capacities=[1.0, 1.0, 0.5, 0.5], **kw)
+        p.update(n_workers=2)  # stale 4-wide vector must not survive
+        assert p.capacities is None
+        p.update(capacities=[1.0, 0.5])
+        assert p.capacities == (1.0, 0.5)
+        p.update(capacities=None)
+        assert p.capacities is None
+
+
+# -- scheduler capacity feed ---------------------------------------------------
+
+
+class TestSchedulerCapacityFeed:
+    @staticmethod
+    def _scheduler(**cfg_kw):
+        cfg = SchedulerConfig(
+            target_sync=0.3, m_mem=2_000, refit_interval=10_000,
+            capacity_planning=True, **cfg_kw,
+        )
+        model = CostModel(a=0.0, b=1e-6, p=2.0, r2=1.0, n_samples=0)
+        shapes = [DataShape(1, 64, 64, 4), DataShape(9, 64, 64, 4)]
+        sched = AdaptiveLoadScheduler(
+            cfg, shapes, initial_model=model, n_workers=4,
+        )
+        sched.make_planner(seed=0, accumulation=2.0)
+        return sched
+
+    def test_slowdown_telemetry_sets_capacities(self):
+        sched = self._scheduler(capacity_tol=0.05)
+        # 4 ranks see the same shapes; rank 3 runs 2x slow (the chaos
+        # slowdown hook's telemetry signature)
+        for step in range(12):
+            recs = [
+                WorkerStepRecord(
+                    step=step, worker=w, batch_size=bs, seq_len=sl,
+                    compute_time=0.01 * (2.0 if w == 3 else 1.0),
+                )
+                for w in range(4)
+                for bs, sl in ((1, 64), (2, 64))
+            ]
+            sched.observe(recs)
+        caps = sched.planner.capacities
+        assert caps is not None and len(caps) == 4
+        assert caps[3] == min(caps)  # the slow rank gets the least work
+        assert np.isclose(np.mean(caps), 1.0)
+        assert any("capacity replan" in u.reason for u in sched.updates)
+        plan = sched.planner.plan()
+        assert plan.capacities == caps
+        sched.close()
+
+    def test_capacities_survive_state_round_trip(self):
+        a = self._scheduler(capacity_tol=0.05)
+        a._capacities = [1.2, 1.2, 0.8, 0.8]
+        b = self._scheduler(capacity_tol=0.05)
+        b.load_state_dict(a.state_dict())
+        assert b._capacities == [1.2, 1.2, 0.8, 0.8]
+        assert b.planner.capacities == (1.2, 1.2, 0.8, 0.8)
+        a.close()
+        b.close()
+
+    def test_capacities_cleared_on_resize(self):
+        sched = self._scheduler()
+        sched._capacities = [1.0, 1.0, 0.5, 0.5]
+        sched.resize(2)
+        assert sched._capacities is None
+        assert sched.planner.capacities is None
+        sched.close()
+
+
+# -- end-to-end churn parity (the headline gate) -------------------------------
+
+
+class TestChurnParity:
+    def test_kill_join_preempt_resume_matches_uninterrupted(self, tmp_path):
+        n_steps = 6
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+
+        full_loader = _loader()
+        s_full, _ = _trainer(full_loader).run(
+            state0, iter(full_loader), n_steps, rng=jax.random.PRNGKey(1),
+            log_every=0,
+        )
+        full_digests = [p.digest().hex() for p in full_loader.plans[:n_steps]]
+        full_loader.close()
+
+        loader_a = _loader()
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1.0, 1.0, min_interval_steps=100),
+            monitor=HeartbeatMonitor(4, timeout_s=1e9),
+            preemption=PreemptionNotice(),
+        )
+        tr = _trainer(loader_a, ft=ft,
+                      chaos=ChaosSchedule.from_spec("kill@1:2,3;join@3:2;preempt@4"))
+        ft.on_resize = tr.set_physical_ranks  # remap elasticity
+        _, hist = tr.run(
+            state0, iter(loader_a), n_steps, rng=jax.random.PRNGKey(1),
+            log_every=0,
+        )
+        assert hist.preempted
+        n_done = len(hist.losses)
+        assert n_done == 5  # preempt after completing step 4
+        assert any(e.startswith("chaos:kill") for e in hist.events)
+        assert any(e.startswith("join@3:2->4") for e in hist.events)
+        digests_a = [p.digest().hex() for p in loader_a.plans[:n_done]]
+        loader_a.close()
+
+        run_state = store.load_run_state(str(tmp_path))
+        assert run_state["step"] == n_done
+        s_b = store.restore(
+            str(tmp_path),
+            jax.eval_shape(lambda: init_state(jax.random.PRNGKey(0), CFG, OPT)),
+        )
+        loader_b = _loader(resume_state=run_state["loader"])
+        s_b, _ = _trainer(loader_b).run(
+            s_b, iter(loader_b), n_steps - n_done,
+            rng=deserialize_rng_key(run_state["trainer"]["rng"]),
+            start_step=run_state["step"], log_every=0,
+        )
+        digests_b = [
+            p.digest().hex() for p in loader_b.plans[: n_steps - n_done]
+        ]
+        loader_b.close()
+
+        assert digests_a + digests_b == full_digests
+        from repro.distributed.plan_exec import rel_l2
+
+        assert rel_l2(
+            jax.device_get(s_full["params"]), jax.device_get(s_b["params"])
+        ) == 0.0  # bit-identical on the emulated engine
+
+    def test_replan_mode_scales_the_loader_up(self, tmp_path):
+        # the literal tentpole path: --elastic replan resizes the loader
+        # itself through the deterministic plan stream (join@2 grows 4 -> 4
+        # after a kill shrank it to 2), and training keeps running
+        state0 = init_state(jax.random.PRNGKey(0), CFG, OPT)
+        loader = _loader()
+        ft = FaultTolerantRunner(
+            ckpt_dir=str(tmp_path),
+            cadence=CheckpointCadence(1.0, 1.0, min_interval_steps=100),
+            monitor=HeartbeatMonitor(4, timeout_s=1e9),
+        )
+        tr = _trainer(loader, ft=ft,
+                      chaos=ChaosSchedule.from_spec("kill@1:2,3;join@3:2"))
+        ft.on_resize = loader.resize
+        _, hist = tr.run(
+            state0, iter(loader), 6, rng=jax.random.PRNGKey(1), log_every=0,
+        )
+        loader.close()
+        assert len(hist.losses) == 6
+        assert loader.n_workers == 4  # shrank to 2, grew back to 4
+        # the post-kill resize re-emits the boundary plan, so the stream
+        # can't snapshot at step 3 — the join drains to the NEXT boundary
+        assert "join-deferred@3" in hist.events
+        assert any(
+            e.startswith("join@") and e.endswith(":2->4") for e in hist.events
+        )

@@ -222,8 +222,10 @@ class TestElasticResizeFaultTolerance:
         """Marked-dead ranks at step 1 -> the driver emergency-saves,
         shrinks the loader 4->2 via recovery_plan, re-arms the monitor,
         and keeps training; every executed fan-out (4-rank before, 2-rank
-        after) matches the single-device oracle <= 1e-5; the emergency
-        checkpoint then restores and continues with parity too."""
+        after) matches the single-device oracle <= 1e-5; the forced
+        post-resize full snapshot (which supersedes the weights-only
+        emergency save) then restores at the new width and continues with
+        parity too."""
         n_steps = 6
         loader = _loader()
         monitor = HeartbeatMonitor(4, timeout_s=1e9)
@@ -272,12 +274,20 @@ class TestElasticResizeFaultTolerance:
             jax.device_get(s_end["params"]), jax.device_get(s_oracle["params"])
         ) <= 1e-5
 
-        # the emergency checkpoint restores and CONTINUES with parity
+        # the newest checkpoint is the forced post-resize FULL snapshot
+        # (not the pre-resize emergency save): its run state was captured
+        # at the shrunken 2-rank width, and restoring it CONTINUES with
+        # parity
         run_state = store.load_run_state(tmp_path)
         assert run_state is not None
+        resumed_width = int(run_state["loader"]["planner"]["n_workers"])
+        assert resumed_width == 2
         s_r = store.restore(tmp_path, _like())
         start = run_state["step"]
-        loader2 = _loader(resume_state=run_state["loader"])
+        assert start >= 2  # post-resize boundary, past the failure step
+        loader2 = _loader(
+            n_workers=resumed_width, resume_state=run_state["loader"]
+        )
         rec2 = _Recorder(iter(loader2))
         try:
             s_r2, _ = Trainer(CFG, OPT).run(
