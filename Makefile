@@ -2,7 +2,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-churn bench-attn example
+.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-churn bench-sp bench-attn example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -46,6 +46,13 @@ bench-resume:
 bench-churn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
 		--only dispatch --smoke --churn
+
+# sequence-parallel split buckets: long-tail planning (>=20% predicted
+# makespan cut) + one executed ring fan-out vs the merged-window oracle
+bench-sp:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only dispatch --smoke --sp
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention

@@ -99,6 +99,10 @@ def main() -> None:
                     help="add the elastic-churn section to the dispatch "
                          "bench (mixed-fleet capacity-weighted packing CV "
                          "+ chaos kill/join/preempt digest parity)")
+    ap.add_argument("--sp", action="store_true",
+                    help="add the sequence-parallel section to the dispatch "
+                         "bench (split-bucket planning on a long-tail corpus "
+                         "+ executed ring fan-out parity vs the oracle)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write section results as JSON (CI artifact)")
     args = ap.parse_args()
@@ -142,6 +146,8 @@ def main() -> None:
                 kwargs["resume"] = args.resume
             if "churn" in params:
                 kwargs["churn"] = args.churn
+            if "sp" in params:
+                kwargs["sp"] = args.sp
             results[name] = m.run(csv, **kwargs)
         except Exception:  # noqa: BLE001
             failures.append(name)

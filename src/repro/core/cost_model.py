@@ -46,6 +46,10 @@ class CostModel:
     p: float
     r2: float
     n_samples: int = 0
+    #: ring-communication weight for sequence-parallel split microbatches,
+    #: in load units per transferred token (see :func:`split_load`).  0.0
+    #: (and absent from old JSON fits) = comm-free splitting.
+    comm_scale: float = 0.0
 
     def predict(self, batch_size: float, seq_len: float) -> float:
         return self.a + self.b * batch_size * float(seq_len) ** self.p
@@ -60,6 +64,21 @@ class CostModel:
         dispatch systematically misweight them.
         """
         return self.a + self.b * batch_size * packed_load(seg_lengths, self.p)
+
+    def predict_split(
+        self, batch_size: float, seg_lengths: Sequence[int], k: int
+    ) -> float:
+        """Per-rank step time when one packed window spans ``k`` ring ranks.
+
+        The compute term divides evenly (each rank owns a contiguous 1/k Q
+        shard and the segment-aware tile skip prices remote KV blocks the
+        same way the packed kernel prices local ones); the ring adds one
+        KV rotation per step, ``S * (k-1)/k`` tokens of traffic per rank,
+        weighted by ``comm_scale``.  ``k=1`` is exactly
+        :meth:`predict_packed`."""
+        return self.a + self.b * batch_size * split_load(
+            seg_lengths, self.p, k, comm_scale=self.comm_scale
+        )
 
     def load_of(self, bucket) -> float:
         """Predicted step time of one pool microbatch — the ``load_of`` the
@@ -101,6 +120,26 @@ def packed_load(seg_lengths: Sequence[int], p: float) -> float:
     exact attention FLOPs; the fitted p folds in the linear terms).
     """
     return float(sum(float(n) ** p for n in seg_lengths))
+
+
+def split_load(
+    seg_lengths: Sequence[int],
+    p: float,
+    k: int,
+    *,
+    comm_scale: float = 0.0,
+) -> float:
+    """Per-rank load of one packed window split across ``k`` ring ranks:
+    ``sum(len^p) / k + comm_scale * S * (k-1)/k``.
+
+    The comm term is the per-rank ring traffic — every rank forwards its
+    KV shard ``k-1`` times, ``S/k`` tokens per hop — expressed in the same
+    load units the planner packs on, so split and unsplit microbatches
+    compare on one scale."""
+    if k < 1:
+        raise ValueError(f"split fan-out k must be >= 1, got {k}")
+    total = float(sum(seg_lengths))
+    return packed_load(seg_lengths, p) / k + comm_scale * total * (k - 1) / k
 
 
 def _ols_r2(x: np.ndarray, y: np.ndarray) -> tuple[float, float, float]:

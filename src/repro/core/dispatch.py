@@ -60,7 +60,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
@@ -69,8 +69,138 @@ from .bucketing import Bucket
 
 DISPATCH_STRATEGIES = ("random", "lpt", "knapsack")
 
+# ring shard widths must stay tileable by the flash kernel's KV block
+# (kernels/flash_attention/ring._pick_block accepts multiples of 128)
+SPLIT_ALIGN = 128
+
 # sentinel distinguishing "not passed" from an explicit None in update()
 _UNSET: object = object()
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitShard:
+    """One rank's share of a sequence-parallel *split bucket*.
+
+    When one packed window is too heavy for any single rank, the planner
+    replaces its pool entry with ``n_ranks`` sibling shards — shard ``s``
+    owns the window's ``s``-th contiguous sequence slice and is pinned to
+    the ``s``-th rank of a contiguous rank window, so execution can lower
+    the group onto a ``("data", "seq")`` sub-mesh and ring the KV shards
+    (``kernels.flash_attention.ring``).  Siblings are indivisible: the
+    refinement passes treat their pool indices as ``locked`` (moving one
+    shard without the others would tear the ring apart).
+
+    ``rank_load`` is the planner-facing per-rank cost — base load / k plus
+    the ring-communication term (``core.cost_model.split_load``)."""
+
+    base: Any  # the microbatch being split (duck-typed planner unit)
+    n_ranks: int  # k — sibling count == ring size
+    shard: int  # this shard's index, 0..k-1 (== offset in the rank window)
+    rank_load: float
+
+    def __post_init__(self) -> None:
+        if self.n_ranks < 2:
+            raise ValueError("a split bucket needs >= 2 ranks")
+        if not 0 <= self.shard < self.n_ranks:
+            raise ValueError(
+                f"shard {self.shard} out of range [0, {self.n_ranks})"
+            )
+
+    @property
+    def batch_size(self) -> int:
+        return self.base.batch_size
+
+    @property
+    def seq_len(self) -> int:
+        """This rank's sequence-slice width (telemetry shape)."""
+        return self.base.seq_len // self.n_ranks
+
+    @property
+    def tokens(self) -> int:
+        # distribute the remainder so sibling token counts sum exactly to
+        # the base's (StepPlan.tokens and elastic regrouping weight on it)
+        return (
+            self.base.tokens + self.n_ranks - 1 - self.shard
+        ) // self.n_ranks
+
+    def load(self, p: float) -> float:
+        """Planner load (duck-types ``Bucket.load``/``PackedBucket.load``;
+        the split cost was fixed at plan time, so ``p`` is ignored)."""
+        del p
+        return self.rank_load
+
+    def digest_key(self) -> tuple:
+        """Commits the full split topology — ring size AND shard index on
+        top of the base window's identity — so two hosts that split
+        differently (or place shards differently) can never agree."""
+        return ("split", self.n_ranks, self.shard, microbatch_key(self.base))
+
+
+def split_locked_indices(plan: "StepPlan") -> frozenset:
+    """Pool indices the refinement passes must never move: every
+    ``SplitShard`` is pinned to its planned rank (satellite of the ring
+    lowering — a shard that migrates breaks the contiguous sub-mesh)."""
+    return frozenset(
+        i for i, b in enumerate(plan.microbatches) if isinstance(b, SplitShard)
+    )
+
+
+def merge_split_worker_steps(worker_steps):
+    """Collapse a split fan-out back to its logical whole-window form.
+
+    Each split group's ``k`` sibling ``(SplitShard, shard batch)`` entries
+    become ONE ``(base, merged batch)`` entry at shard 0's position (shard
+    0 sits on the group's lowest rank, so rank-major enumeration — and
+    therefore every microbatch's pool index and gradient RNG — is
+    identical between the split and merged forms).  Shard batches are
+    concatenated along the sequence axis; the globally computed
+    ``positions`` rows are dropped (a whole window recomputes them from
+    its segment ids).  This is what :func:`repro.distributed.plan_exec.
+    oracle_step` and the emulated engine consume so one oracle covers
+    split and unsplit plans."""
+    groups: dict[int, dict[int, tuple]] = {}
+    for share in worker_steps:
+        for b, batch in share:
+            if isinstance(b, SplitShard):
+                slot = groups.setdefault(id(b.base), {})
+                if b.shard in slot:
+                    raise ValueError(
+                        f"duplicate shard {b.shard} of a split bucket"
+                    )
+                slot[b.shard] = (b, batch)
+    if not groups:
+        return [list(share) for share in worker_steps]
+    merged: dict[int, tuple] = {}
+    for key, slot in groups.items():
+        if 0 not in slot:
+            raise ValueError("split group is missing shard 0")
+        k = slot[0][0].n_ranks
+        if sorted(slot) != list(range(k)):
+            raise ValueError(
+                f"split group has shards {sorted(slot)}; expected 0..{k - 1}"
+            )
+        batches = [slot[s][1] for s in range(k)]
+        merged[key] = (
+            slot[0][0].base,
+            {
+                name: np.concatenate(
+                    [np.asarray(bb[name]) for bb in batches], axis=1
+                )
+                for name in batches[0]
+                if name != "positions"
+            },
+        )
+    out = []
+    for share in worker_steps:
+        new_share = []
+        for b, batch in share:
+            if isinstance(b, SplitShard):
+                if b.shard == 0:
+                    new_share.append(merged[id(b.base)])
+            else:
+                new_share.append((b, batch))
+        out.append(new_share)
+    return out
 
 
 def microbatch_key(b) -> tuple:
@@ -204,6 +334,7 @@ def _apply_best_exchange(
     lo: int,
     eps: float,
     capacities: Sequence[float] | None = None,
+    locked: frozenset = frozenset(),
 ) -> bool:
     """Apply the best single-item move/swap between workers ``hi`` and
     ``lo`` (``hi`` the slower-finishing of the pair), minimizing the pair's
@@ -212,7 +343,8 @@ def _apply_best_exchange(
     the pair max.  The pair's maximum never increases, so the global
     makespan is monotone non-increasing under any sequence of these
     exchanges.  Workers are never emptied (a move requires the donor to
-    keep >= 1 item)."""
+    keep >= 1 item).  Items in ``locked`` (split-bucket shards pinned to
+    their ring ranks) never move in either direction."""
     c_hi = capacities[hi] if capacities is not None else 1.0
     c_lo = capacities[lo] if capacities is not None else 1.0
     pair_max = totals[hi] / c_hi
@@ -222,6 +354,8 @@ def _apply_best_exchange(
     best: tuple[str, int, int] | None = None
     if len(groups[hi]) > 1:
         for i in groups[hi]:
+            if i in locked:
+                continue
             cand = max(
                 (totals[hi] - loads[i]) / c_hi,
                 (totals[lo] + loads[i]) / c_lo,
@@ -229,7 +363,11 @@ def _apply_best_exchange(
             if cand < best_max - eps:
                 best_max, best = cand, ("move", i, -1)
     for i in groups[hi]:
+        if i in locked:
+            continue
         for j in groups[lo]:
+            if j in locked:
+                continue
             delta = loads[i] - loads[j]
             if delta <= 0:
                 continue
@@ -264,6 +402,7 @@ def refine_swaps(
     max_rounds: int = 64,
     eps: float = 1e-12,
     capacities: Sequence[float] | None = None,
+    locked: frozenset | None = None,
 ) -> list[list[int]]:
     """Pairwise rebalancing between the slowest- and fastest-finishing
     workers.
@@ -275,8 +414,10 @@ def refine_swaps(
     the refined assignment is never worse than its LPT seed.  Workers are
     never emptied (a move requires the donor to keep >= 1 item).  With
     ``capacities`` finish times are capacity-weighted (``total / cap``);
-    uniform capacities reduce to the classic load-balance pass.
+    uniform capacities reduce to the classic load-balance pass.  ``locked``
+    pool indices (split-bucket shards) are pinned to their seeded workers.
     """
+    locked = locked if locked is not None else frozenset()
     groups = [list(g) for g in assignment]
     totals = [sum(loads[i] for i in g) for g in groups]
     caps = (
@@ -288,7 +429,7 @@ def refine_swaps(
         hi = max(range(len(groups)), key=lambda r: totals[r] / caps[r])
         lo = min(range(len(groups)), key=lambda r: totals[r] / caps[r])
         if not _apply_best_exchange(
-            loads, groups, totals, hi, lo, eps, capacities
+            loads, groups, totals, hi, lo, eps, capacities, locked
         ):
             break
     return groups
@@ -302,6 +443,7 @@ def refine_fixed_rounds(
     seed_bytes: bytes,
     eps: float = 1e-12,
     capacities: Sequence[float] | None = None,
+    locked: frozenset | None = None,
 ) -> list[list[int]]:
     """Exactly ``rounds`` exchange rounds — a pure function of its inputs.
 
@@ -314,9 +456,12 @@ def refine_fixed_rounds(
     on (loads, assignment, seed_bytes) — so every host, thread schedule,
     and resumed run computes byte-identical output.  The makespan is still
     monotone non-increasing (each exchange only ever lowers its pair's
-    maximum)."""
+    maximum).  ``locked`` pool indices (split-bucket shards) never move —
+    the escape-pair draws still consume RNG identically, so locking does
+    not perturb the deterministic stream shape."""
     if rounds < 1:
         raise ValueError("deterministic refinement needs rounds >= 1")
+    locked = locked if locked is not None else frozenset()
     rng = np.random.default_rng(int.from_bytes(seed_bytes[:8], "big"))
     groups = [list(g) for g in assignment]
     totals = [sum(loads[i] for i in g) for g in groups]
@@ -330,7 +475,7 @@ def refine_fixed_rounds(
         hi = max(range(n), key=lambda r: totals[r] / caps[r])
         lo = min(range(n), key=lambda r: totals[r] / caps[r])
         if _apply_best_exchange(
-            loads, groups, totals, hi, lo, eps, capacities
+            loads, groups, totals, hi, lo, eps, capacities, locked
         ):
             continue
         if n <= 2:
@@ -338,7 +483,9 @@ def refine_fixed_rounds(
         a, b = (int(x) for x in rng.choice(n, size=2, replace=False))
         if totals[a] / caps[a] < totals[b] / caps[b]:
             a, b = b, a
-        _apply_best_exchange(loads, groups, totals, a, b, eps, capacities)
+        _apply_best_exchange(
+            loads, groups, totals, a, b, eps, capacities, locked
+        )
     return groups
 
 
@@ -446,6 +593,7 @@ class PlanRefiner:
         return ticket
 
     def _refined_plan(self, seed: StepPlan) -> StepPlan:
+        locked = split_locked_indices(seed)
         if self.deterministic:
             groups = refine_fixed_rounds(
                 seed.loads,
@@ -453,6 +601,7 @@ class PlanRefiner:
                 rounds=self.rounds,
                 seed_bytes=seed.digest(),
                 capacities=seed.capacities,
+                locked=locked,
             )
         else:
             groups = refine_swaps(
@@ -460,6 +609,7 @@ class PlanRefiner:
                 seed.assignments,
                 max_rounds=self._max_rounds,
                 capacities=seed.capacities,
+                locked=locked,
             )
         return dataclasses.replace(
             seed,
@@ -639,6 +789,8 @@ class StepPlanner:
         deterministic_refine: bool = False,
         refine_rounds: int = 16,
         capacities: Sequence[float] | None = None,
+        sp_max_ranks: int = 1,
+        split_load_of: Callable[[Any, int], float] | None = None,
     ):
         if n_workers < 1:
             raise ValueError("n_workers must be >= 1")
@@ -649,6 +801,8 @@ class StepPlanner:
             )
         if refine_rounds < 1:
             raise ValueError("refine_rounds must be >= 1")
+        if sp_max_ranks < 1:
+            raise ValueError("sp_max_ranks must be >= 1")
         self._lock = threading.Lock()
         self._rng = np.random.default_rng(seed)
         self.n_workers = n_workers
@@ -657,6 +811,15 @@ class StepPlanner:
         self.budget_of = budget_of
         self.load_of = load_of if load_of is not None else budget_of
         self._capacities = self._checked_capacities(capacities, n_workers)
+        # sequence-parallel split buckets: with sp_max_ranks >= 2 the
+        # planner may replace the pool's heaviest packed window with k
+        # sibling SplitShards on a contiguous rank window — adopted only
+        # when the split plan's predicted makespan strictly beats the
+        # unsplit plan's (so enabling SP can never plan worse).
+        # split_load_of(bucket, k) prices one shard; None = base/k
+        # (comm-free; wire CostModel.predict_split-style pricing here).
+        self.sp_max_ranks = sp_max_ranks
+        self.split_load_of = split_load_of
         # overlapped knapsack refinement: plan_async() returns the LPT seed
         # and runs the swap passes on a PlanRefiner thread (spawned lazily
         # so plain synchronous planners never start one).  deterministic
@@ -720,6 +883,8 @@ class StepPlanner:
         deterministic_refine: bool | None = None,
         refine_rounds: int | None = None,
         capacities: Sequence[float] | None = _UNSET,
+        sp_max_ranks: int | None = None,
+        split_load_of: Callable[[Any, int], float] | None = _UNSET,
     ) -> None:
         """Swap any part of the plan mid-training (scheduler replans,
         elastic resizes) without draining the pipeline.
@@ -761,6 +926,12 @@ class StepPlanner:
                 and len(self._capacities) != self.n_workers
             ):
                 self._capacities = None
+            if sp_max_ranks is not None:
+                if sp_max_ranks < 1:
+                    raise ValueError("sp_max_ranks must be >= 1")
+                self.sp_max_ranks = sp_max_ranks
+            if split_load_of is not _UNSET:
+                self.split_load_of = split_load_of
             if budget is not None:
                 if budget <= 0:
                     raise ValueError("budget must be positive")
@@ -817,13 +988,113 @@ class StepPlanner:
                 rng if rng is not None else self._rng,
                 self._capacities,
             )
-            return StepPlan(
+            plan = StepPlan(
                 microbatches=tuple(pool),
                 assignments=tuple(tuple(g) for g in assignment),
                 loads=tuple(loads),
                 strategy=self.strategy,
                 capacities=self._capacities,
             )
+            split = self._split_candidate(
+                pool, loads, plan.makespan(),
+                refine=(self.strategy == "knapsack"),
+                strategy=self.strategy,
+            )
+            return split if split is not None else plan
+
+    def _split_candidate(
+        self,
+        pool: Sequence,
+        loads: Sequence[float],
+        base_makespan: float,
+        *,
+        refine: bool,
+        strategy: str,
+        eps: float = 1e-12,
+    ) -> StepPlan | None:
+        """The best split-bucket variant of (pool, loads), or None.
+
+        Splits the pool's single heaviest packed microbatch into k sibling
+        :class:`SplitShard` entries (k = 2..sp_max_ranks, shard widths
+        128-aligned), pins them to the contiguous rank window with the
+        best finish time, packs the remaining singles around the pinned
+        preloads with capacity-aware LPT, and — for the knapsack strategy
+        — refines with the shard indices locked.  Returns a plan only when
+        some k's predicted makespan strictly beats ``base_makespan``, so a
+        split-enabled planner is never worse than an unsplit one on its
+        own cost model (the hypothesis-property invariant).  Must be
+        called with ``self._lock`` held."""
+        k_max = min(self.sp_max_ranks, self.n_workers)
+        if k_max < 2 or not pool or strategy == "random":
+            return None
+        hi = max(range(len(pool)), key=lambda i: (loads[i], -i))
+        b = pool[hi]
+        if getattr(b, "lengths", None) is None:
+            # only packed LM windows have a ring lowering (segment-aware
+            # flash); rectangular media buckets stay whole
+            return None
+        split_load_of = self.split_load_of or (
+            lambda mb, k: float(self.load_of(mb)) / k
+        )
+        caps = (
+            list(self._capacities)
+            if self._capacities is not None
+            else [1.0] * self.n_workers
+        )
+        best: tuple[float, StepPlan] | None = None
+        for k in range(2, k_max + 1):
+            seq = int(b.seq_len)
+            if seq % k or (seq // k) % SPLIT_ALIGN:
+                continue
+            rank_load = float(split_load_of(b, k))
+            shards = tuple(
+                SplitShard(base=b, n_ranks=k, shard=s, rank_load=rank_load)
+                for s in range(k)
+            )
+            new_pool = tuple(pool[:hi]) + shards + tuple(pool[hi + 1 :])
+            new_loads = (
+                list(loads[:hi]) + [rank_load] * k + list(loads[hi + 1 :])
+            )
+            # contiguous rank window minimizing the slowest shard's finish
+            # (ties -> lowest r0, so placement is deterministic)
+            r0 = min(
+                range(self.n_workers - k + 1),
+                key=lambda r: max(rank_load / caps[r + s] for s in range(k)),
+            )
+            groups: list[list[int]] = [[] for _ in range(self.n_workers)]
+            totals = [0.0] * self.n_workers
+            for s in range(k):
+                groups[r0 + s].append(hi + s)
+                totals[r0 + s] += rank_load
+            singles = [i for i in range(len(new_loads)) if not hi <= i < hi + k]
+            for i in sorted(singles, key=lambda i: (-new_loads[i], i)):
+                w = min(
+                    range(self.n_workers),
+                    key=lambda r: ((totals[r] + new_loads[i]) / caps[r], r),
+                )
+                groups[w].append(i)
+                totals[w] += new_loads[i]
+            if any(not g for g in groups):
+                continue  # a plan may never hand a rank an empty share
+            if refine:
+                groups = refine_swaps(
+                    new_loads, groups,
+                    capacities=self._capacities,
+                    locked=frozenset(range(hi, hi + k)),
+                )
+            cand = StepPlan(
+                microbatches=new_pool,
+                assignments=tuple(tuple(g) for g in groups),
+                loads=tuple(new_loads),
+                strategy=strategy,
+                capacities=self._capacities,
+            )
+            span = cand.makespan()
+            if span < base_makespan - eps and (
+                best is None or span < best[0] - eps
+            ):
+                best = (span, cand)
+        return best[1] if best is not None else None
 
     def plan(self) -> StepPlan:
         """Draw + pack one optimizer step."""
@@ -859,6 +1130,16 @@ class StepPlanner:
                     strategy="lpt",
                     capacities=self._capacities,
                 )
+                # the split decision must live in the digest-committed
+                # seed (refinement only regroups; it can never introduce
+                # or undo a split) — the refiner then keeps the sibling
+                # shards locked to their ring ranks
+                split = self._split_candidate(
+                    pool, loads, seed.makespan(),
+                    refine=False, strategy="lpt",
+                )
+                if split is not None:
+                    seed = split
                 if self._refiner is None:
                     self._refiner = PlanRefiner(
                         deterministic=self.deterministic_refine,
@@ -889,6 +1170,7 @@ class StepPlanner:
                 "overlap": self.overlap,
                 "deterministic_refine": self.deterministic_refine,
                 "refine_rounds": self.refine_rounds,
+                "sp_max_ranks": self.sp_max_ranks,
                 "capacities": (
                     list(self._capacities)
                     if self._capacities is not None
@@ -912,6 +1194,8 @@ class StepPlanner:
             self.overlap = bool(sd["overlap"])
             self.deterministic_refine = bool(sd["deterministic_refine"])
             self.refine_rounds = int(sd["refine_rounds"])
+            # absent in pre-SP checkpoints -> splitting disabled
+            self.sp_max_ranks = int(sd.get("sp_max_ranks", 1))
             # absent in pre-capacity checkpoints -> uniform fleet
             self._capacities = self._checked_capacities(
                 sd.get("capacities"), self.n_workers
@@ -948,17 +1232,21 @@ class StepPlanner:
 
 __all__ = [
     "DISPATCH_STRATEGIES",
+    "SPLIT_ALIGN",
     "PlanRefiner",
     "RefineTicket",
+    "SplitShard",
     "StepPlan",
     "StepPlanner",
     "assign_pool",
     "group_worker_steps",
     "makespan",
+    "merge_split_worker_steps",
     "microbatch_key",
     "normalized_weights",
     "partition_contiguous",
     "plan_digest",
     "refine_fixed_rounds",
     "refine_swaps",
+    "split_locked_indices",
 ]

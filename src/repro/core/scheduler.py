@@ -25,9 +25,36 @@ import dataclasses
 from typing import Sequence
 
 from .bucketing import Bucket, BucketingPolicy, DataShape
-from .cost_model import CostModel, fit_cost_model
+from .cost_model import CostModel, fit_cost_model, split_load
 from .dispatch import DISPATCH_STRATEGIES, StepPlanner
 from .telemetry import TelemetryBuffer, WorkerStepRecord
+
+#: Static relative-throughput table for known accelerator classes — the
+#: capacity seed a heterogeneous fleet starts from BEFORE telemetry warms
+#: up (the capacity_planning loop then refines it from measured speeds).
+#: Values are dense-transformer step-throughput ratios, not peak-FLOP
+#: ratios; only ratios matter (capacity vectors are normalized to mean 1).
+DEVICE_CLASSES: dict[str, float] = {
+    "v4": 0.55,
+    "v5e": 0.45,
+    "v5p": 1.0,
+    "v6e": 1.35,
+}
+
+
+def capacities_from_classes(classes: Sequence[str]) -> list[float]:
+    """Per-rank capacity vector from device-class names, normalized to
+    mean 1.0 (the same convention telemetry-estimated capacities use, so
+    the budget scale is unchanged)."""
+    try:
+        caps = [float(DEVICE_CLASSES[c]) for c in classes]
+    except KeyError as e:
+        raise ValueError(
+            f"unknown device class {e.args[0]!r}; known: "
+            f"{sorted(DEVICE_CLASSES)}"
+        ) from None
+    mean = sum(caps) / len(caps)
+    return [c / mean for c in caps]
 
 
 @dataclasses.dataclass
@@ -61,8 +88,28 @@ class SchedulerConfig:
     capacity_planning: bool = False
     capacity_floor: float = 0.25  # clip speeds to [floor, 1/floor]
     capacity_tol: float = 0.10  # hysteresis: replan only on a bigger shift
+    # heterogeneous fleet composition declared up front: one DEVICE_CLASSES
+    # name per rank, seeding the planner's capacity vector from the static
+    # class table so the very first plans pack against known speed ratios
+    # instead of waiting a telemetry warm-up (capacity_planning refines the
+    # seed from measured speeds once it has data)
+    device_classes: tuple[str, ...] | None = None
+    # sequence parallelism: let the attached StepPlanner split one long
+    # packed window across up to this many contiguous ranks (ring
+    # attention); 1 = never split.  The split cost is priced by the fitted
+    # model's split_load (compute/k + comm_scale ring traffic).
+    sp_max_ranks: int = 1
 
     def __post_init__(self) -> None:
+        if self.device_classes is not None:
+            unknown = [c for c in self.device_classes if c not in DEVICE_CLASSES]
+            if unknown:
+                raise ValueError(
+                    f"unknown device classes {unknown}; known: "
+                    f"{sorted(DEVICE_CLASSES)}"
+                )
+        if self.sp_max_ranks < 1:
+            raise ValueError("sp_max_ranks must be >= 1")
         if not 0.0 < self.capacity_floor <= 1.0:
             raise ValueError("capacity_floor must be in (0, 1]")
         if self.capacity_tol < 0:
@@ -116,6 +163,14 @@ class AdaptiveLoadScheduler:
         self.model = initial_model
         self._derate = 1.0
         self._capacities: list[float] | None = None
+        if config.device_classes is not None:
+            if len(config.device_classes) != n_workers:
+                raise ValueError(
+                    f"device_classes names {len(config.device_classes)} "
+                    f"ranks but the scheduler drives {n_workers}"
+                )
+            # static seed; telemetry capacity planning may later override
+            self._capacities = capacities_from_classes(config.device_classes)
         self.updates: list[PlanUpdate] = []
         self._steps_seen = 0
         self.planner: StepPlanner | None = None
@@ -149,7 +204,23 @@ class AdaptiveLoadScheduler:
                 budget_of=lambda b: b.load(p),
                 n_workers=self.n_workers,
                 capacities=self._capacities_for(self.n_workers),
+                split_load_of=self._split_load_of(model),
             )
+
+    def _split_load_of(self, model: CostModel):
+        """Per-rank load of a microbatch split across ``k`` ring ranks, in
+        the SAME ``sum(len^p)`` units ``budget_of`` packs with — so the
+        planner's split-vs-pack comparison is apples to apples.  The comm
+        term comes from the fitted model's ``comm_scale``."""
+        p, cs = model.p, model.comm_scale
+
+        def f(b, k: int) -> float:
+            lengths = getattr(b, "lengths", None)
+            if lengths is not None:
+                return split_load(lengths, p, k, comm_scale=cs)
+            return float(b.load(p)) / k
+
+        return f
 
     def _capacities_for(self, n_workers: int) -> list[float] | None:
         """The capacity vector to push with a replan — only if it still
@@ -181,6 +252,8 @@ class AdaptiveLoadScheduler:
             deterministic_refine=self.config.deterministic_refine,
             refine_rounds=self.config.refine_rounds,
             capacities=self._capacities_for(self.n_workers),
+            sp_max_ranks=self.config.sp_max_ranks,
+            split_load_of=self._split_load_of(self.model),
         )
         return self.planner
 
@@ -298,6 +371,7 @@ class AdaptiveLoadScheduler:
                 budget_of=lambda b: b.load(p),
                 n_workers=self.n_workers,
                 capacities=self._capacities_for(self.n_workers),
+                split_load_of=self._split_load_of(self.model),
             )
 
     # -- lifecycle ----------------------------------------------------------

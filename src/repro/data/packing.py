@@ -172,6 +172,46 @@ def segment_id_batch(windows: Sequence[PackedWindow], window: int) -> np.ndarray
     return np.stack([window_segment_ids(w, window) for w in windows])
 
 
+def segment_relative_positions_np(segment_ids: np.ndarray) -> np.ndarray:
+    """``[B, S]`` within-segment positions — numpy twin of
+    ``models.attention.segment_relative_positions`` (same formula, same
+    int32 output), for the loader side: a split packed batch must carry
+    positions computed on the WHOLE window so RoPE does not restart at a
+    shard boundary, and the loader slices before anything touches jax."""
+    seg = np.asarray(segment_ids)
+    b, s = seg.shape
+    idx = np.broadcast_to(np.arange(s, dtype=np.int32), (b, s))
+    boundary = np.concatenate(
+        [np.ones((b, 1), dtype=bool), seg[:, 1:] != seg[:, :-1]], axis=1
+    )
+    run_start = np.maximum.accumulate(np.where(boundary, idx, 0), axis=1)
+    return (idx - run_start).astype(np.int32)
+
+
+def split_packed_batch(batch: dict, k: int) -> list[dict]:
+    """Slice one packed LM batch into ``k`` contiguous sequence shards.
+
+    Every ``[B, S]`` array is cut into equal ``[B, S/k]`` chunks; shard
+    ``s`` additionally carries ``positions`` — the whole window's
+    segment-relative positions, sliced — so the sequence-parallel loss
+    sees globally consistent RoPE phases.  The materialization partner of
+    ``core.dispatch.SplitShard``: call once per split group and hand shard
+    ``s`` to rank ``r0 + s``."""
+    if k < 2:
+        raise ValueError(f"split fan-out k must be >= 2, got {k}")
+    seq = int(np.asarray(batch["tokens"]).shape[1])
+    if seq % k:
+        raise ValueError(f"sequence length {seq} is not divisible by k={k}")
+    full = dict(batch)
+    if "positions" not in full:
+        full["positions"] = segment_relative_positions_np(full["segment_ids"])
+    w = seq // k
+    return [
+        {name: np.asarray(v)[:, s * w : (s + 1) * w] for name, v in full.items()}
+        for s in range(k)
+    ]
+
+
 def packing_efficiency(windows: Sequence[PackedWindow], window: int) -> float:
     if not windows:
         return 0.0

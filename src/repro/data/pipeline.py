@@ -32,9 +32,11 @@ import numpy as np
 from repro.core.bucketing import Bucket
 from repro.core.cost_model import CostModel
 from repro.core.dispatch import (
+    SplitShard,
     StepPlan,
     StepPlanner,
     assign_pool,
+    merge_split_worker_steps,
     normalized_weights,
 )
 from repro.data.packing import (
@@ -42,6 +44,7 @@ from repro.data.packing import (
     PackedWindow,
     pack_documents,
     segment_id_batch,
+    split_packed_batch,
 )
 
 
@@ -306,6 +309,8 @@ class ShardedBucketedLoader:
         deterministic_refine: bool = False,
         refine_rounds: int | None = None,
         capacities: Sequence[float] | None = None,
+        sp_max_ranks: int | None = None,
+        split_load_of: Callable | None = None,
         resume_state: dict | None = None,
     ):
         self.n_workers = n_workers
@@ -317,11 +322,13 @@ class ShardedBucketedLoader:
                     or budget_of is not None or load_of is not None
                     or strategy is not None or overlap
                     or deterministic_refine or refine_rounds is not None
-                    or capacities is not None):
+                    or capacities is not None or sp_max_ranks is not None
+                    or split_load_of is not None):
                 raise ValueError(
                     "pass either planner= or the plan-defining args "
                     "(weights/budget/budget_of/load_of/strategy/overlap/"
-                    "deterministic_refine/refine_rounds/capacities), not both"
+                    "deterministic_refine/refine_rounds/capacities/"
+                    "sp_max_ranks/split_load_of), not both"
                 )
             if list(buckets) != planner.buckets:
                 raise ValueError(
@@ -352,6 +359,8 @@ class ShardedBucketedLoader:
                 deterministic_refine=deterministic_refine,
                 refine_rounds=refine_rounds if refine_rounds is not None else 16,
                 capacities=capacities,
+                sp_max_ranks=sp_max_ranks if sp_max_ranks is not None else 1,
+                split_load_of=split_load_of,
             )
         self._make_batch = make_batch
         self._rng = np.random.default_rng(seed + 1)
@@ -435,8 +444,25 @@ class ShardedBucketedLoader:
         Materialization is keyed by pool index, not by assignment, so an
         overlapped knapsack refinement — which only regroups the pool —
         can be adopted after the fact without rebuilding a single batch.
-        """
-        return [self._make_batch(self._rng, b) for b in plan.microbatches]
+
+        A split group's k ``SplitShard`` entries consume ONE ``make_batch``
+        draw (the whole window, built at the first shard's pool position,
+        then sliced by ``split_packed_batch``) — so the RNG stream, and
+        therefore replay, is identical whether the planner split the
+        window or not."""
+        out: list[dict] = []
+        split_cache: dict[int, list[dict]] = {}
+        for b in plan.microbatches:
+            if isinstance(b, SplitShard):
+                shards = split_cache.get(id(b.base))
+                if shards is None:
+                    whole = self._make_batch(self._rng, b.base)
+                    shards = split_packed_batch(whole, b.n_ranks)
+                    split_cache[id(b.base)] = shards
+                out.append(shards[b.shard])
+            else:
+                out.append(self._make_batch(self._rng, b))
+        return out
 
     @staticmethod
     def _fan_out(plan: StepPlan, batches: Sequence[dict]) -> list[WorkerStep]:
@@ -448,7 +474,14 @@ class ShardedBucketedLoader:
     def _repack(self, items: WorkerStep, n_workers: int) -> list[WorkerStep]:
         """Re-deal already-materialized microbatches across ``n_workers``
         using the planner's load function + strategy (exactly-once: items
-        are moved, never duplicated or dropped)."""
+        are moved, never duplicated or dropped).
+
+        Split shards can't be re-dealt independently — their batches are
+        sequence slices of one window and their rank placement must stay a
+        contiguous ring — so they collapse back to the whole window first
+        (the next planner draw decides whether to split again for the new
+        world size)."""
+        items = merge_split_worker_steps([list(items)])[0]
         loads = [float(self._planner.load_of(b)) for b, _ in items]
         caps = self._planner.capacities
         if caps is not None and len(caps) != n_workers:
@@ -510,7 +543,10 @@ class ShardedBucketedLoader:
         buf: WorkerStep = list(self._carry)
         self._carry = []
         for seq in sorted(by_seq):
-            buf += by_seq[seq]
+            # regrouping is by whole plan boundary, so any split group is
+            # complete here — collapse it before counting (k sibling
+            # shards are ONE logical microbatch, not k re-dealable items)
+            buf = merge_split_worker_steps([buf + by_seq[seq]])[0]
             if len(buf) >= n_workers:
                 per_rank = self._repack(buf, n_workers)
                 self._plans.append(self._emitted_plan(per_rank))
@@ -589,9 +625,10 @@ class ShardedBucketedLoader:
                     target = self._planner.n_workers
                     self._adopt_locked(target)
                     if plan.n_workers != target or self._carry:
-                        items = self._carry + [
-                            it for share in per_rank for it in share
-                        ]
+                        items = merge_split_worker_steps([
+                            self._carry
+                            + [it for share in per_rank for it in share]
+                        ])[0]
                         if len(items) < target:
                             # a stale small plan can't give every new rank a
                             # microbatch; hold it for the next (right-sized)

@@ -51,11 +51,15 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.dispatch import microbatch_key
+from repro.core.dispatch import (
+    SplitShard,
+    merge_split_worker_steps,
+    microbatch_key,
+)
 from repro.core.telemetry import WorkerStepRecord
 from repro.models.config import ModelConfig
 from repro.optim.adamw import OptimizerConfig, adamw_update
-from repro.train.steps import make_pool_grad_step
+from repro.train.steps import make_pool_grad_step, make_sp_pool_grad_step
 
 WorkerSteps = Sequence[Sequence[tuple[Any, dict]]]  # [rank][(bucket, batch)]
 
@@ -197,7 +201,13 @@ class PlanExecutor:
         # batch-shape signature and per execution device, so each
         # (shape, rank) pair compiles exactly once and the steady state
         # pays zero retrace.
+        self._policy = policy
         self._grad_step = jax.jit(make_pool_grad_step(cfg, policy))
+        # sequence-parallel split buckets: per contiguous rank group
+        # (r0, k), a ("data", "seq") sub-mesh carved from the same
+        # devices plus the jitted shard_map'd SP grad step (built lazily;
+        # one compile per (group, shard shape))
+        self._sp_steps: dict[tuple[int, int], tuple[Mesh, Any]] = {}
         self._acc_add = jax.jit(
             lambda a, b: jax.tree.map(jnp.add, a, b), donate_argnums=(0,)
         )
@@ -395,6 +405,167 @@ class PlanExecutor:
             ),
         )
 
+    # -- sequence-parallel split buckets -----------------------------------
+
+    def _collect_split_groups(self, worker_steps: WorkerSteps) -> dict:
+        """Index and validate the fan-out's split-bucket groups.
+
+        Returns ``{id(base): {"k", "r0", "entries": {shard: (rank, bucket,
+        batch)}}}``.  A group must be complete (shards 0..k-1, each once),
+        sit on contiguous ascending ranks (shard s on rank r0+s — the
+        contract the planner's contiguous-window placement guarantees and
+        the ring's ppermute topology assumes), fit the mesh, and carry
+        equal-width shard batches with globally computed ``positions``."""
+        groups: dict[int, dict] = {}
+        for rank, share in enumerate(worker_steps):
+            for bucket, batch in share:
+                if not isinstance(bucket, SplitShard):
+                    continue
+                g = groups.setdefault(
+                    id(bucket.base), {"k": bucket.n_ranks, "entries": {}}
+                )
+                if bucket.n_ranks != g["k"] or bucket.shard in g["entries"]:
+                    raise ValueError(
+                        "malformed split group: sibling shards disagree on "
+                        "ring size or repeat a shard index"
+                    )
+                g["entries"][bucket.shard] = (rank, bucket, batch)
+        for g in groups.values():
+            k = g["k"]
+            if sorted(g["entries"]) != list(range(k)):
+                raise ValueError(
+                    f"incomplete split group: shards {sorted(g['entries'])} "
+                    f"present, expected 0..{k - 1}"
+                )
+            r0 = g["entries"][0][0]
+            if r0 + k > self.n_ranks:
+                raise ValueError(
+                    f"split group needs ranks {r0}..{r0 + k - 1} but the "
+                    f"mesh has {self.n_ranks} data-axis devices"
+                )
+            widths = set()
+            for s in range(k):
+                rank, _bucket, batch = g["entries"][s]
+                if rank != r0 + s:
+                    raise ValueError(
+                        "split shards must occupy contiguous ascending "
+                        f"ranks (shard {s} on rank {rank}, expected {r0 + s})"
+                    )
+                if "positions" not in batch:
+                    raise ValueError(
+                        "split shard batches need globally computed "
+                        "'positions' (RoPE must not restart at the shard "
+                        "boundary)"
+                    )
+                widths.add(batch["tokens"].shape[1])
+            if len(widths) != 1:
+                raise ValueError(
+                    f"split shard widths differ: {sorted(widths)}"
+                )
+            g["r0"] = r0
+        return groups
+
+    def _sp_step(self, r0: int, k: int):
+        """The jitted SP grad step for the contiguous rank group
+        [r0, r0+k): a ``("data", "seq")`` sub-mesh (data dim 1) over those
+        devices, running :func:`make_sp_pool_grad_step` under shard_map —
+        every group rank returns the whole window's loss/grad, replicated."""
+        key = (r0, k)
+        if key not in self._sp_steps:
+            devs = np.array(self.devices[r0 : r0 + k]).reshape(1, k)
+            submesh = Mesh(devs, ("data", "seq"))
+            sp = make_sp_pool_grad_step(self.cfg, self._policy)
+
+            def body(params, tokens, labels, seg, pos, step_key, idx):
+                batch = {
+                    "tokens": tokens,
+                    "labels": labels,
+                    "segment_ids": seg,
+                    "positions": pos,
+                }
+                return sp(params, batch, step_key, idx)
+
+            fn = jax.jit(
+                shard_map(
+                    body,
+                    mesh=submesh,
+                    in_specs=(P(),) + (P(None, "seq"),) * 4 + (P(), P()),
+                    out_specs=(P(), P()),
+                    check_rep=False,  # psum/ppermute defeat rep inference
+                )
+            )
+            self._sp_steps[key] = (submesh, fn)
+        return self._sp_steps[key]
+
+    def _device_view(self, tree, dev):
+        """One device's committed view of a tree of mesh-global arrays."""
+
+        def view(x):
+            for s in x.addressable_shards:
+                if s.device == dev:
+                    return s.data
+            raise ValueError(f"array is not addressable on device {dev}")
+
+        return jax.tree.map(view, tree)
+
+    def _run_split_group(self, param_views, group, step_key, pool_index):
+        """Dispatch one split bucket's ring step across its rank group.
+
+        Inputs are assembled zero-copy onto the group's sub-mesh: the
+        group ranks' replicated param views become one replicated sub-mesh
+        array per leaf, and each rank's staged shard batch becomes the
+        ``P(None, "seq")`` shard of the window's global arrays.  Returns
+        ``(loss, grads, fresh)`` as sub-mesh-global (replicated) arrays —
+        the caller takes per-device views (rank r0 contributes the whole
+        window's gradient to the data-axis reduction; siblings contribute
+        nothing, so the single pool-mean psum stays exact)."""
+        r0, k = group["r0"], group["k"]
+        submesh, fn = self._sp_step(r0, k)
+        devs = self.devices[r0 : r0 + k]
+        rep = NamedSharding(submesh, P())
+        seqsh = NamedSharding(submesh, P(None, "seq"))
+
+        def assemble_rep(*leaves):
+            return jax.make_array_from_single_device_arrays(
+                leaves[0].shape, rep, list(leaves)
+            )
+
+        params_g = jax.tree.map(
+            assemble_rep, *[param_views[r0 + s] for s in range(k)]
+        )
+        shard_batches = [
+            self._take_staged(group["entries"][s][2], devs[s])
+            for s in range(k)
+        ]
+        sig = (
+            "sp", r0, k,
+            self._signature(devs[0], shard_batches[0]),
+        )
+        fresh = sig not in self._seen_signatures
+        self._seen_signatures.add(sig)
+
+        def assemble_seq(name):
+            parts = [sb[name] for sb in shard_batches]
+            shape = (parts[0].shape[0], sum(p.shape[1] for p in parts))
+            return jax.make_array_from_single_device_arrays(
+                shape, seqsh, parts
+            )
+
+        key_g = assemble_rep(*[jax.device_put(step_key, d) for d in devs])
+        idx_g = assemble_rep(
+            *[jax.device_put(np.int32(pool_index), d) for d in devs]
+        )
+        loss, grads = fn(
+            params_g,
+            assemble_seq("tokens"),
+            assemble_seq("labels"),
+            assemble_seq("segment_ids"),
+            assemble_seq("positions"),
+            key_g,
+            idx_g,
+        )
+        return loss, grads, fresh
+
     # -- the step ----------------------------------------------------------
 
     def _build_update(self, state):
@@ -477,6 +648,14 @@ class PlanExecutor:
           another: wall-clock degenerates to the cross-rank SUM.  Kept as
           the benchmark baseline; opt in explicitly.
 
+        Sequence-parallel split buckets (``SplitShard`` entries) are
+        executed as ONE ring step per group on a ``("data", "seq")``
+        sub-mesh over the group's contiguous devices: shard 0's rank
+        dispatches the group, takes its device view of the replicated
+        full-window gradient and contributes it as one logical microbatch
+        (one ``pool_index``); sibling ranks contribute nothing, so the
+        data-axis pool mean is exact.
+
         ``out["compiled"]`` reports whether any microbatch paid a fresh
         compile this step (the trainer excludes such steps from
         throughput).  A fan-out SMALLER than the mesh (elastic shrink
@@ -508,6 +687,7 @@ class PlanExecutor:
         # async measure: (rank, t_dispatch0, [(bucket, loss, fresh), ...])
         rank_jobs: list[tuple[int, float, list]] = []
         param_views = self._rank_views(state["params"])
+        split_groups = self._collect_split_groups(worker_steps)
         for rank in range(self.n_ranks):
             # elastic shrink: a plan may fan out to fewer ranks than the
             # mesh has devices — the extra devices idle this step,
@@ -534,10 +714,89 @@ class PlanExecutor:
             key_r = jax.device_put(step_key, dev)
             acc = None
             loss_sum = None
+            n_local = 0  # logical microbatches owned by this rank
             t_rank = 0.0
             jobs: list = []
             t_rank0 = time.perf_counter()
             for bucket, batch in share:
+                if isinstance(bucket, SplitShard):
+                    g = split_groups[id(bucket.base)]
+                    if bucket.shard == 0:
+                        # rank-major order visits shard 0 (the lowest rank
+                        # of the contiguous group) first: dispatch the
+                        # whole ring step here, on the group's sub-mesh
+                        t0 = time.perf_counter()
+                        loss_g, grads_g, fresh = self._run_split_group(
+                            param_views, g, step_key, pool_index
+                        )
+                        compiled = compiled or fresh
+                        g["fresh"] = fresh
+                        loss = self._device_view(loss_g, dev)
+                        grads = self._device_view(grads_g, dev)
+                        if measure == "serial":
+                            loss.block_until_ready()
+                            dt = time.perf_counter() - t0
+                            g["dt"] = dt
+                            if not fresh:
+                                scale = (
+                                    time_scale(rank) if time_scale else 1.0
+                                )
+                                t_rank += dt * scale
+                                records.append(
+                                    WorkerStepRecord(
+                                        step=step,
+                                        worker=rank,
+                                        batch_size=bucket.batch_size,
+                                        seq_len=bucket.seq_len,
+                                        compute_time=dt * scale,
+                                    )
+                                )
+                        elif measure == "async":
+                            # one completion sentinel per group device so
+                            # sibling ranks' timers observe the ring too
+                            g["sentinels"] = [
+                                self._device_view(loss_g, d)
+                                for d in self.devices[
+                                    g["r0"] : g["r0"] + g["k"]
+                                ]
+                            ]
+                            jobs.append((bucket, loss, fresh))
+                        acc = (
+                            grads if acc is None else self._acc_add(acc, grads)
+                        )
+                        loss_sum = loss if loss_sum is None else loss_sum + loss
+                        pool_index += 1
+                        n_local += 1
+                    else:
+                        # sibling shard: the group's psum already folded
+                        # this device's compute into shard 0's gradient
+                        # view — contribute nothing to the data-axis
+                        # reduction, only account for the ring time
+                        if measure == "serial":
+                            if not g["fresh"]:
+                                scale = (
+                                    time_scale(rank) if time_scale else 1.0
+                                )
+                                dt = g["dt"] * scale
+                                t_rank += dt
+                                records.append(
+                                    WorkerStepRecord(
+                                        step=step,
+                                        worker=rank,
+                                        batch_size=bucket.batch_size,
+                                        seq_len=bucket.seq_len,
+                                        compute_time=dt,
+                                    )
+                                )
+                        elif measure == "async":
+                            jobs.append(
+                                (
+                                    bucket,
+                                    g["sentinels"][bucket.shard],
+                                    g["fresh"],
+                                )
+                            )
+                    continue
                 batch_r = self._take_staged(batch, dev)
                 idx_r = jax.device_put(np.int32(pool_index), dev)
                 sig = self._signature(dev, batch_r)
@@ -566,11 +825,23 @@ class PlanExecutor:
                 acc = grads if acc is None else self._acc_add(acc, grads)
                 loss_sum = loss if loss_sum is None else loss_sum + loss
                 pool_index += 1
-            per_rank_grads.append(self._lift(acc))
-            stats = jnp.stack(
-                [loss_sum.astype(jnp.float32), jnp.float32(len(share))]
-            )
-            per_rank_stats.append(self._lift(stats))
+                n_local += 1
+            if acc is None:
+                # every entry on this rank was a sibling shard of some
+                # split group — its compute already lives inside shard 0's
+                # gradient view, so this rank reduces zeros (exactly like
+                # an idle rank; the pool mean stays exact)
+                zero = jax.device_put(np.zeros((), np.float32), dev)
+                per_rank_grads.append(self._lift(self._zeros(params_r, zero)))
+                per_rank_stats.append(
+                    jax.device_put(np.zeros((1, 2), np.float32), dev)
+                )
+            else:
+                per_rank_grads.append(self._lift(acc))
+                stats = jnp.stack(
+                    [loss_sum.astype(jnp.float32), jnp.float32(n_local)]
+                )
+                per_rank_stats.append(self._lift(stats))
             if measure == "serial":
                 rank_times.append(t_rank)
             elif measure == "async":
@@ -600,7 +871,12 @@ def oracle_step(cfg: ModelConfig, opt: OptimizerConfig, state, worker_steps,
     """Single-device reference: the gradient/update a non-distributed
     trainer computes for the same global pool (rank-major enumeration,
     identical per-microbatch RNG derivation).  The mesh path must match
-    this to ~float32 resolution — the parity gate in the tier-1 tests."""
+    this to ~float32 resolution — the parity gate in the tier-1 tests.
+
+    Split fan-outs are merged first: a split bucket's k sibling shards
+    collapse back into the full packed window at shard 0's pool position,
+    so one oracle definition covers split and unsplit plans."""
+    worker_steps = merge_split_worker_steps(worker_steps)
     grad_fn = jax.jit(make_pool_grad_step(cfg, policy))
     acc = None
     loss_sum = 0.0

@@ -90,6 +90,7 @@ def attention(
     q_segment_ids=None,  # [B, Sq] int32, non-negative; None = one segment
     kv_segment_ids=None,  # [B, Skv]
     scale: float | None = None,
+    seq_axis: str | None = None,  # mesh axis name: ring sequence-parallel
 ):
     """Segment-aware self/cross attention (model [B, S, H, dh] layout).
 
@@ -99,6 +100,13 @@ def attention(
     jnp oracle and SPMD-friendly CPU/dry-run path.  Both mask by segment-id
     equality, so packed variable-length windows never attend across
     document boundaries.
+
+    ``seq_axis`` selects the sequence-parallel ring variant: the caller is
+    inside ``shard_map`` over that mesh axis and passes its contiguous
+    shard of one packed window; KV blocks rotate via ``ppermute`` (see
+    ``flash_attention.ring``).  Pallas backends ring the flash kernel,
+    jnp backends ring the reference block — both match the single-device
+    packed kernel on the gathered window.
     """
     # models are layered above kernels; import lazily to avoid the cycle
     from repro.models.attention import blocked_attention, repeat_kv
@@ -107,6 +115,27 @@ def attention(
     hkv = k.shape[2]
     if hq % hkv != 0:  # no backend can group these heads
         raise ValueError(f"GQA needs Hq % Hkv == 0, got Hq={hq}, Hkv={hkv}")
+    if seq_axis is not None:
+        if _BACKEND.startswith("pallas") and dh % 128 == 0:
+            from .flash_attention.ring import ring_flash_attention
+
+            out = ring_flash_attention(
+                q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+                q_segment_ids, kv_segment_ids,
+                axis_name=seq_axis, causal=causal, scale=scale,
+                interpret=_interpret(),
+            )
+            return out.swapaxes(1, 2)
+        if _BACKEND.startswith("pallas"):
+            _warn_flash_fallback(dh)
+        from .flash_attention.ring import ring_attention_ref
+
+        out = ring_attention_ref(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            q_segment_ids, kv_segment_ids,
+            axis_name=seq_axis, causal=causal, scale=scale,
+        )
+        return out.swapaxes(1, 2)
     if _BACKEND.startswith("pallas"):
         if dh % 128 == 0:
             from .flash_attention.ops import flash_attention

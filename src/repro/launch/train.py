@@ -84,6 +84,12 @@ def main() -> None:
                          "(requires --overlap)")
     ap.add_argument("--refine-rounds", type=int, default=16,
                     help="exchange rounds for --deterministic-refine")
+    ap.add_argument("--sp-max-ranks", type=int, default=1,
+                    help="sequence parallelism: let the planner split one "
+                         "long packed window across up to K contiguous "
+                         "ranks (ring segment-aware attention); 1 = never "
+                         "split.  Only packed variable-length microbatches "
+                         "are eligible")
     ap.add_argument("--elastic", default="remap", choices=("remap", "replan"),
                     help="how rank-count changes (failures, joins) land: "
                          "'remap' keeps the plan stream at its logical "
@@ -121,6 +127,11 @@ def main() -> None:
     if args.chaos and not (args.adaptive and args.workers > 1):
         ap.error("--chaos injects rank-level faults; pass --adaptive "
                  "--workers N (N > 1)")
+    if args.sp_max_ranks < 1:
+        ap.error("--sp-max-ranks must be >= 1")
+    if args.sp_max_ranks > 1 and not (args.mesh or args.workers > 1):
+        ap.error("--sp-max-ranks > 1 needs the planner-driven multi-rank "
+                 "stream (--workers N > 1, usually with --mesh)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt = get_optimizer(args.arch)
@@ -183,6 +194,9 @@ def main() -> None:
                 overlap=args.overlap,
                 deterministic_refine=args.deterministic_refine,
                 refine_rounds=args.refine_rounds,
+                sp_max_ranks=(
+                    args.sp_max_ranks if args.sp_max_ranks > 1 else None
+                ),
                 resume_state=(run_state or {}).get("loader"),
             )
         else:

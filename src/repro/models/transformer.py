@@ -209,7 +209,8 @@ def _project_qkv(bp: Params, x, cfg: ModelConfig):
 
 
 def _self_attn_full(
-    bp, x, cfg: ModelConfig, positions, policy, *, local: bool, segment_ids=None
+    bp, x, cfg: ModelConfig, positions, policy, *, local: bool,
+    segment_ids=None, seq_axis=None,
 ):
     q, k, v = _project_qkv(bp, x, cfg)
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -220,6 +221,10 @@ def _self_attn_full(
         k = policy.constrain(k, "attn_kv")
         v = policy.constrain(v, "attn_kv")
     if local:
+        if seq_axis is not None:
+            raise ValueError(
+                "sequence parallelism supports global attention blocks only"
+            )
         ctx = local_attention(
             q, repeat_kv(k, g), repeat_kv(v, g),
             window=cfg.local_window, segment_ids=segment_ids,
@@ -228,6 +233,7 @@ def _self_attn_full(
         ctx = K.attention(  # GQA-native; flash kernel on TPU backends
             q, k, v, causal=True,
             q_segment_ids=segment_ids, kv_segment_ids=segment_ids,
+            seq_axis=seq_axis,
         )
     b, s = x.shape[:2]
     out = ctx.reshape(b, s, cfg.n_heads * cfg.head_dim) @ bp["wo"]
@@ -259,6 +265,7 @@ def apply_block(
     n_groups: int = 1,
     collect_cache: bool = False,
     segment_ids=None,
+    seq_axis=None,
 ):
     """One transformer block in train/prefill mode.
 
@@ -266,6 +273,11 @@ def apply_block(
     """
     aux = jnp.zeros((), jnp.float32)
     cache = None
+    if seq_axis is not None and kind not in ("attn", "moe"):
+        raise ValueError(
+            f"sequence parallelism does not support {kind!r} blocks "
+            f"(global-attention transformer blocks only)"
+        )
     h = apply_norm(bp["norm1"], x, cfg.norm, cfg.norm_eps)
     if policy is not None:
         h = policy.constrain(h, "resid")
@@ -273,6 +285,7 @@ def apply_block(
         out, (k, v) = _self_attn_full(
             bp["attn"], h, cfg, positions, policy,
             local=(kind == "local"), segment_ids=segment_ids,
+            seq_axis=seq_axis,
         )
         x = x + out
         if collect_cache:
@@ -435,20 +448,34 @@ def forward(
     collect_cache: bool = False,
     unroll: bool = False,
     segment_ids=None,  # [B, S] int32: packed-window doc ids (-1 = padding)
+    positions=None,  # [B, S] or [S]: override RoPE positions (SP shards)
+    seq_axis=None,  # mesh axis name: this call runs inside shard_map over
+                    # a "seq" sub-axis and holds one contiguous S shard
 ):
     """Token ids [B, S] -> (hidden [B, S, d], aux_loss, caches|None).
 
     With ``segment_ids`` set (packed windows), self-attention is scoped to
     each document and RoPE positions restart at every document boundary.
+
+    Under sequence parallelism (``seq_axis``), ``tokens``/``segment_ids``
+    are this rank's contiguous shard of one window and ``positions`` must
+    be the globally computed document-relative positions for the shard —
+    the local recomputation below would restart at the shard boundary.
     """
     lead, pat, n_rep, tail = cfg.superblocks()
+    if seq_axis is not None and positions is None:
+        raise ValueError(
+            "sequence-parallel forward needs globally computed positions "
+            "(per-shard recomputation would restart at the shard boundary)"
+        )
     x = params["embed"][tokens]
     if policy is not None:
         x = policy.constrain(x, "resid")
-    if segment_ids is not None:
-        positions = segment_relative_positions(segment_ids)
-    else:
-        positions = jnp.arange(tokens.shape[1])
+    if positions is None:
+        if segment_ids is not None:
+            positions = segment_relative_positions(segment_ids)
+        else:
+            positions = jnp.arange(tokens.shape[1])
     aux = jnp.zeros((), jnp.float32)
     caches: Params = {"lead": [], "tail": [], "blocks": {}}
 
@@ -457,6 +484,7 @@ def forward(
             bp, x, kind, cfg, positions,
             memory=memory, policy=policy, n_groups=n_groups,
             collect_cache=collect_cache, segment_ids=segment_ids,
+            seq_axis=seq_axis,
         )
 
     for bp, kind in zip(params["lead"], lead):
@@ -510,10 +538,13 @@ def lm_loss(
     loss_chunk: int = 512,
     unroll: bool = False,
     segment_ids=None,
+    positions=None,
+    seq_axis=None,
 ):
     h, aux, _ = forward(
         params, cfg, tokens, memory=memory, policy=policy, n_groups=n_groups,
-        unroll=unroll, segment_ids=segment_ids,
+        unroll=unroll, segment_ids=segment_ids, positions=positions,
+        seq_axis=seq_axis,
     )
     ce = chunked_softmax_xent(h, params["embed"], labels, chunk=min(loss_chunk, tokens.shape[1]))
     aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import SplitShard, merge_split_worker_steps
 from repro.core.telemetry import WorkerStepRecord
 from repro.distributed.plan_exec import PlanExecutor, worker_steps_digest
 from repro.models.config import ModelConfig
@@ -171,12 +172,27 @@ class EmulatedEngine(ExecutionEngine):
     def execute_step(self, state, worker_steps, *, step_key, step):
         self._records = []
         self._last_ranks = list(range(len(worker_steps)))
+        # sequence-parallel split fan-outs collapse back to their logical
+        # whole-window form (this backend has no ring to shard over); the
+        # merged entry sits at shard 0's pool position so RNG/enumeration
+        # match the mesh path exactly
+        had_splits = any(
+            isinstance(b, SplitShard)
+            for share in worker_steps
+            for b, _batch in share
+        )
+        if had_splits:
+            worker_steps = merge_split_worker_steps(worker_steps)
         compiled = False
         acc = None
         loss_sum = None
         pool_index = 0
         for w, share in enumerate(worker_steps):
             if not share:
+                if had_splits:
+                    # this rank's whole share was sibling shards of split
+                    # groups owned by lower ranks — nothing left to run
+                    continue
                 # same contract as PlanExecutor: an engine must never
                 # silently swallow an input its sibling backend rejects
                 raise ValueError(

@@ -98,6 +98,62 @@ def make_pool_grad_step(cfg: ModelConfig, policy=None) -> Callable:
     return grad_step
 
 
+def make_sp_loss_fn(cfg: ModelConfig, policy=None, *, seq_axis: str = "seq",
+                    unroll: bool = False) -> Callable:
+    """Per-shard loss for a sequence-parallel split microbatch.
+
+    The batch is this rank's contiguous S shard of ONE packed window
+    (tokens/labels/segment_ids sliced, ``positions`` globally computed so
+    RoPE does not restart at the shard boundary).  Returns the LOCAL mean
+    token loss; with equal shard widths the pool-level mean over the
+    ``seq`` axis equals the full window's mean-token loss exactly.
+    """
+    if cfg.family != "dense":
+        raise ValueError(
+            f"sequence parallelism supports the dense transformer LM path "
+            f"only (got family={cfg.family!r})"
+        )
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def loss_fn(params, batch, rng):
+        del rng  # the LM path is deterministic given the batch
+        return T.lm_loss(
+            params, cfg, batch["tokens"], batch["labels"],
+            policy=policy, n_groups=n_groups, unroll=unroll,
+            segment_ids=batch.get("segment_ids"),
+            positions=batch["positions"], seq_axis=seq_axis,
+        )
+
+    return loss_fn
+
+
+def make_sp_pool_grad_step(cfg: ModelConfig, policy=None, *,
+                           seq_axis: str = "seq") -> Callable:
+    """The per-device body of a split bucket's gradient step.
+
+    Call from inside ``shard_map`` over mesh axis ``seq_axis``; every rank
+    of the group returns the SAME (loss, grads) — the full window's mean
+    token loss and its exact parameter gradient (per-shard grads meet in
+    one psum; cross-shard attention terms travel through the ring's
+    ``ppermute`` transposes).  RNG derivation matches
+    :func:`make_pool_grad_step` so a split entry folds into the pool
+    enumeration exactly like an unsplit one.
+    """
+    loss_fn = make_sp_loss_fn(cfg, policy, seq_axis=seq_axis)
+
+    def grad_step(params, batch, step_key, pool_index):
+        rng = jax.random.fold_in(step_key, pool_index)
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, rng)
+        k = jax.lax.psum(1, seq_axis)
+        loss = jax.lax.psum(loss, seq_axis) / k
+        grads = jax.tree.map(
+            lambda g: jax.lax.psum(g, seq_axis) / k, grads
+        )
+        return loss, grads
+
+    return grad_step
+
+
 def make_train_step(cfg: ModelConfig, opt: OptimizerConfig, policy=None,
                     unroll: bool = False) -> Callable:
     loss_fn = make_loss_fn(cfg, policy, unroll)
