@@ -2,7 +2,7 @@
 
 PYTHONPATH := src
 
-.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-churn bench-sp bench-attn example
+.PHONY: test lint bench bench-dispatch bench-smoke bench-mesh bench-overlap bench-resume bench-churn bench-sp bench-attn bench-serve example
 
 test:
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
@@ -56,6 +56,13 @@ bench-sp:
 
 bench-attn:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run --only attention
+
+# continuous vs static batching on the simulated clock (goodput + p99
+# gates) plus the real paged-KV ServeEngine parity leg
+bench-serve:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run \
+		--only serve --smoke --json benchmarks/out/bench_serve.json
 
 example:
 	PYTHONPATH=$(PYTHONPATH) python examples/train_wan_adaptiveload.py \

@@ -33,6 +33,7 @@ SECTIONS = [
     ("loss_convergence", "paper Fig.8: loss congruence"),
     ("packing", "LM-side dual-constraint packing"),
     ("roofline", "dry-run roofline terms (deliverable g)"),
+    ("serve", "plan-driven continuous batching vs static: latency + goodput"),
 ]
 
 THRESHOLDS_PATH = pathlib.Path(__file__).parent / "thresholds.json"
@@ -134,6 +135,8 @@ def main() -> None:
                 from . import bench_packing as m
             elif name == "roofline":
                 from . import roofline as m
+            elif name == "serve":
+                from . import bench_serve as m
             kwargs = {}
             params = inspect.signature(m.run).parameters
             if "smoke" in params:

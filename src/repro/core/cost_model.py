@@ -103,6 +103,47 @@ class CostModel:
             raise ValueError(f"degenerate slope b={self.b}")
         return (target_sync - self.a) / self.b
 
+    def fit_comm_scale(self, records: Sequence) -> "CostModel":
+        """Calibrate ``comm_scale`` from sequence-parallel telemetry.
+
+        Each record is one rank's shard of a split bucket (``ring_ranks =
+        k > 1``; ``seq_len`` is the per-shard width ``S_full / k``).  Under
+        the rectangular split model the measured time is::
+
+            t = a + b·B·( S_full^p / k  +  cs·S_full·(k-1)/k )
+
+        With ``(a, b, p)`` already fitted from unsplit samples, ``cs`` is
+        one more least-squares slope, through the origin, on the residual
+        load ``(t - a)/b - B·S_full^p/k`` against the per-rank ring
+        traffic ``B·S_full·(k-1)/k``.  Clamped at 0 (a negative fit means
+        the ring was free within noise).  Returns a new model; raises
+        ``ValueError`` when no split records (or a degenerate ``b``) make
+        the fit impossible.
+        """
+        if self.b <= 0:
+            raise ValueError(f"degenerate slope b={self.b}")
+        xs: list[float] = []
+        ys: list[float] = []
+        for r in records:
+            k = int(getattr(r, "ring_ranks", 1))
+            if k < 2:
+                continue
+            s_full = float(r.seq_len) * k
+            resid = (r.compute_time - self.a) / self.b - (
+                r.batch_size * s_full**self.p / k
+            )
+            xs.append(r.batch_size * s_full * (k - 1) / k)
+            ys.append(resid)
+        if not xs:
+            raise ValueError("no split (ring_ranks > 1) records to fit from")
+        xa = np.asarray(xs, dtype=np.float64)
+        ya = np.asarray(ys, dtype=np.float64)
+        sxx = float((xa * xa).sum())
+        if sxx == 0.0:
+            raise ValueError("split records carry zero ring traffic")
+        cs = float((xa * ya).sum()) / sxx
+        return dataclasses.replace(self, comm_scale=max(0.0, cs))
+
     def to_json(self) -> str:
         return json.dumps(dataclasses.asdict(self))
 
@@ -179,6 +220,63 @@ def fit_cost_model(
         p += p_step
     assert best is not None
     return best
+
+
+def fit_cost_model_per_class(
+    samples_by_class: dict[str, Sequence[BenchSample]],
+    *,
+    p_lo: float = P_GRID_LO,
+    p_hi: float = P_GRID_HI,
+    p_step: float = P_GRID_STEP,
+) -> dict[str, CostModel]:
+    """Per-device-class fits sharing ONE exponent (heterogeneous fleets).
+
+    The accelerator class changes the constant and the slope — clocks,
+    overheads, memory bandwidth — but not the arithmetic-intensity
+    exponent of the workload, so ``p`` is grid-searched once maximizing
+    the POOLED R² (residuals summed across classes against the pooled
+    variance) while ``(a, b)`` come from per-class OLS at each candidate.
+    Every class needs >= 3 samples; classes are fitted in sorted-name
+    order so the result is deterministic.
+    """
+    if not samples_by_class:
+        raise ValueError("no classes to fit")
+    for cls, samples in samples_by_class.items():
+        if len(samples) < 3:
+            raise ValueError(
+                f"class {cls!r} has {len(samples)} samples, need >= 3"
+            )
+    items = sorted(samples_by_class.items())
+    ys = {cls: np.array([s.step_time for s in ss]) for cls, ss in items}
+    y_all = np.concatenate([ys[cls] for cls, _ in items])
+    sst = float(((y_all - y_all.mean()) ** 2).sum())
+    best_p: float | None = None
+    best_r2 = -np.inf
+    best_fits: dict[str, tuple[float, float]] = {}
+    p = p_lo
+    while p <= p_hi + 1e-9:
+        ssr = 0.0
+        fits: dict[str, tuple[float, float]] = {}
+        for cls, samples in items:
+            x = np.array([s.feature(p) for s in samples], dtype=np.float64)
+            a, b, _ = _ols_r2(x, ys[cls])
+            fits[cls] = (a, b)
+            ssr += float(((ys[cls] - (a + b * x)) ** 2).sum())
+        r2 = 1.0 - ssr / sst if sst > 0 else 1.0
+        if best_p is None or r2 > best_r2:
+            best_p, best_r2, best_fits = round(p, 4), r2, fits
+        p += p_step
+    assert best_p is not None
+    return {
+        cls: CostModel(
+            a=best_fits[cls][0],
+            b=best_fits[cls][1],
+            p=best_p,
+            r2=best_r2,
+            n_samples=len(samples_by_class[cls]),
+        )
+        for cls, _ in items
+    }
 
 
 def pearson(x: Sequence[float], y: Sequence[float]) -> float:

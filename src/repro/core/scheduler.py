@@ -25,7 +25,12 @@ import dataclasses
 from typing import Sequence
 
 from .bucketing import Bucket, BucketingPolicy, DataShape
-from .cost_model import CostModel, fit_cost_model, split_load
+from .cost_model import (
+    CostModel,
+    fit_cost_model,
+    fit_cost_model_per_class,
+    split_load,
+)
 from .dispatch import DISPATCH_STRATEGIES, StepPlanner
 from .telemetry import TelemetryBuffer, WorkerStepRecord
 
@@ -162,6 +167,10 @@ class AdaptiveLoadScheduler:
         self.n_workers = n_workers
         self.model = initial_model
         self._derate = 1.0
+        #: per-device-class fits (shared p, per-class a/b) — populated by
+        #: refits when ``config.device_classes`` names the fleet; their
+        #: slope ratios derate the capacity vector with measured speeds
+        self.class_models: dict[str, CostModel] | None = None
         self._capacities: list[float] | None = None
         if config.device_classes is not None:
             if len(config.device_classes) != n_workers:
@@ -273,6 +282,9 @@ class AdaptiveLoadScheduler:
             self._check_capacities()
 
     def _maybe_refit(self) -> None:
+        if self.config.device_classes is not None:
+            self._maybe_refit_per_class()
+            return
         samples = self.telemetry.bench_samples()
         try:
             new = fit_cost_model(samples)
@@ -280,12 +292,76 @@ class AdaptiveLoadScheduler:
             return
         if new.r2 < self.config.r2_floor:
             return  # telemetry too noisy to trust; keep the old plan
+        new = self._recalibrate_comm_scale(new)
         p_shift = abs(new.p - self.model.p)
         if p_shift >= self.config.p_shift_tol or new.r2 > self.model.r2 + 0.01:
             self._replan(
                 self._steps_seen,
                 new,
                 f"refit: p {self.model.p:.2f}->{new.p:.2f}, R2 {new.r2:.3f}",
+            )
+
+    def _recalibrate_comm_scale(self, new: CostModel) -> CostModel:
+        """A fresh OLS fit knows nothing about ring traffic: carry the
+        current ``comm_scale`` forward, then recalibrate it from whatever
+        sequence-parallel shard records the buffer holds."""
+        new = dataclasses.replace(new, comm_scale=self.model.comm_scale)
+        split_recs = self.telemetry.split_records()
+        if split_recs:
+            try:
+                new = new.fit_comm_scale(split_recs)
+            except ValueError:
+                pass  # keep the carried-forward value
+        return new
+
+    def _maybe_refit_per_class(self) -> None:
+        """Heterogeneous-fleet refit: per-class (a, b) on a shared
+        exponent.  A mixed fleet's POOLED fit is structurally poor (two
+        slopes through one line), so gating it on ``r2_floor`` would lock
+        the loop open — the per-class fit is the primary path whenever
+        ``device_classes`` declares the composition.
+
+        The scheduler-facing model becomes the SLOWEST class's fit: the
+        barrier latches on the slowest rank, so budgets derived from it
+        keep every class under the target.  The slope ratios (t ~ b·load,
+        so 1/b is speed) replace the static ``DEVICE_CLASSES`` seed with
+        measured capacity derates — a class running hot shows up as a
+        smaller capacity, not a mystery straggler."""
+        classes = self.config.device_classes
+        assert classes is not None
+        by_worker = self.telemetry.bench_samples_by_worker()
+        by_class: dict[str, list] = {}
+        for w, samples in by_worker.items():
+            if w < len(classes):
+                by_class.setdefault(classes[w], []).extend(samples)
+        if set(classes) - set(by_class):
+            return  # a declared class has not reported yet: keep the plan
+        try:
+            fits = fit_cost_model_per_class(by_class)
+        except ValueError:
+            return  # too little telemetry in some class
+        pooled_r2 = next(iter(fits.values())).r2  # shared across classes
+        if pooled_r2 < self.config.r2_floor:
+            return
+        if any(m.b <= 0 for m in fits.values()):
+            return  # degenerate slope: refuse to plan on it
+        slowest = max(fits, key=lambda c: fits[c].b)
+        new = self._recalibrate_comm_scale(fits[slowest])
+        self.class_models = {
+            cls: dataclasses.replace(m, comm_scale=new.comm_scale)
+            for cls, m in fits.items()
+        }
+        speed = {cls: 1.0 / m.b for cls, m in fits.items()}
+        caps = [speed[c] for c in classes]
+        mean = sum(caps) / len(caps)
+        self._capacities = [c / mean for c in caps]
+        p_shift = abs(new.p - self.model.p)
+        if p_shift >= self.config.p_shift_tol or new.r2 > self.model.r2 + 0.01:
+            self._replan(
+                self._steps_seen,
+                new,
+                f"per-class refit ({slowest} slowest): p "
+                f"{self.model.p:.2f}->{new.p:.2f}, R2 {new.r2:.3f}",
             )
 
     def _check_stragglers(self) -> None:
@@ -349,6 +425,11 @@ class AdaptiveLoadScheduler:
             "n_workers": self.n_workers,
             "n_updates": len(self.updates),
             "capacities": self._capacities,
+            "class_models": (
+                {c: dataclasses.asdict(m) for c, m in self.class_models.items()}
+                if self.class_models is not None
+                else None
+            ),
         }
 
     def load_state_dict(self, sd: dict) -> None:
@@ -361,6 +442,10 @@ class AdaptiveLoadScheduler:
         self.n_workers = int(sd["n_workers"])
         caps = sd.get("capacities")  # absent in pre-capacity checkpoints
         self._capacities = [float(c) for c in caps] if caps else None
+        cms = sd.get("class_models")  # absent in pre-heterogeneous checkpoints
+        self.class_models = (
+            {c: CostModel(**m) for c, m in cms.items()} if cms else None
+        )
         self.policy = self._policy_from_model(self.model)
         self.buckets = self.policy.make_buckets(self.shapes)
         if self.planner is not None:

@@ -41,6 +41,13 @@ class WorkerStepRecord:
     # exists so telemetry consumers can tell which execution regime
     # produced a sample.
     timing: str = "host"
+    # ring size when this record is one rank's shard of a sequence-parallel
+    # split bucket (seq_len is then the PER-SHARD width, and compute_time
+    # includes the ring's KV-rotation traffic).  1 = plain unsplit work.
+    # Split records are excluded from ``bench_samples`` — their time does
+    # not follow ``a + b·B·S^p`` in the recorded S — and instead feed
+    # ``CostModel.fit_comm_scale``.
+    ring_ranks: int = 1
 
     @property
     def total(self) -> float:
@@ -74,11 +81,35 @@ class TelemetryBuffer:
         return len(self._records)
 
     def bench_samples(self) -> list[BenchSample]:
-        """(B, S) -> compute_time pairs for cost-model (re)fitting."""
+        """(B, S) -> compute_time pairs for cost-model (re)fitting.
+
+        Sequence-parallel split records are excluded: their compute time is
+        ``load/k`` plus ring traffic, which would bias the ``a + b·B·S^p``
+        fit if charged to the per-shard S.  They feed
+        :meth:`split_records` -> ``CostModel.fit_comm_scale`` instead."""
         return [
             BenchSample(r.batch_size, r.seq_len, r.compute_time)
             for r in self._records
+            if r.ring_ranks <= 1
         ]
+
+    def split_records(self) -> list[WorkerStepRecord]:
+        """Sequence-parallel shard records (``ring_ranks > 1``) — the
+        training pairs for ``CostModel.fit_comm_scale``."""
+        return [r for r in self._records if r.ring_ranks > 1]
+
+    def bench_samples_by_worker(self) -> dict[int, list[BenchSample]]:
+        """Unsplit fit pairs grouped by worker — the input to per-device-
+        class refits (each worker maps to a class via the scheduler's
+        ``device_classes`` table)."""
+        out: dict[int, list[BenchSample]] = {}
+        for r in self._records:
+            if r.ring_ranks > 1:
+                continue
+            out.setdefault(r.worker, []).append(
+                BenchSample(r.batch_size, r.seq_len, r.compute_time)
+            )
+        return out
 
     def wait_sync(self, step: int) -> list[float]:
         ts = self._step_times.get(step, [])
@@ -121,11 +152,13 @@ class TelemetryBuffer:
         when no shape has peer coverage) — shared by straggler detection
         and capacity estimation."""
         recent = list(self._records)[-window * 16 :]
-        by_shape_worker: dict[tuple[int, int], dict[int, list[float]]] = {}
+        # ring_ranks joins the shape key: a split shard's time includes comm,
+        # so it only normalizes against peers running the same ring width
+        by_shape_worker: dict[tuple[int, int, int], dict[int, list[float]]] = {}
         for r in recent:
-            by_shape_worker.setdefault((r.batch_size, r.seq_len), {}).setdefault(
-                r.worker, []
-            ).append(r.compute_time)
+            by_shape_worker.setdefault(
+                (r.batch_size, r.seq_len, r.ring_ranks), {}
+            ).setdefault(r.worker, []).append(r.compute_time)
         by_worker: dict[int, list[float]] = {}
         ratios: list[float] = []
         for per_worker in by_shape_worker.values():

@@ -120,6 +120,7 @@ class RankTimers:
                         seq_len=bucket.seq_len,
                         compute_time=dt * scale,
                         timing="device",
+                        ring_ranks=getattr(bucket, "n_ranks", 1),
                     )
                 )
         self._records[rank] = recs
@@ -749,6 +750,7 @@ class PlanExecutor:
                                         batch_size=bucket.batch_size,
                                         seq_len=bucket.seq_len,
                                         compute_time=dt * scale,
+                                        ring_ranks=getattr(bucket, "n_ranks", 1),
                                     )
                                 )
                         elif measure == "async":
@@ -786,6 +788,7 @@ class PlanExecutor:
                                         batch_size=bucket.batch_size,
                                         seq_len=bucket.seq_len,
                                         compute_time=dt,
+                                        ring_ranks=getattr(bucket, "n_ranks", 1),
                                     )
                                 )
                         elif measure == "async":
@@ -818,6 +821,7 @@ class PlanExecutor:
                                 batch_size=bucket.batch_size,
                                 seq_len=bucket.seq_len,
                                 compute_time=dt * scale,
+                                ring_ranks=getattr(bucket, "n_ranks", 1),
                             )
                         )
                 elif measure == "async":

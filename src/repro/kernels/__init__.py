@@ -155,6 +155,42 @@ def attention(
     )
 
 
+def paged_attention(
+    q,  # [B, Hq, dh]: one new token per decode slot
+    k_pages,  # [P, page_size, Hkv, dh]: shared KV-cache pool
+    v_pages,
+    page_table,  # [B, pages_max] int32 (unused entries -> a scratch page)
+    kv_lens,  # [B] int32 valid tokens per slot (0 = inactive, exact zeros)
+    *,
+    scale: float | None = None,
+):
+    """Decode attention over a paged KV-cache pool (continuous batching).
+
+    On the pallas backends this routes through the paged-attention kernel
+    (page-table-chasing BlockSpecs, whole pages past ``kv_len`` skipped —
+    the page table is segment ids over the pool); otherwise through the
+    jnp gather-and-mask twin, which is also the numeric oracle.
+    """
+    hq, dh = q.shape[1], q.shape[2]
+    hkv = k_pages.shape[2]
+    if hq % hkv != 0:
+        raise ValueError(f"GQA needs Hq % Hkv == 0, got Hq={hq}, Hkv={hkv}")
+    if _BACKEND.startswith("pallas"):
+        if dh % 128 == 0:
+            from .flash_attention.paged import paged_attention_pallas
+
+            return paged_attention_pallas(
+                q, k_pages, v_pages, page_table, kv_lens,
+                scale=scale, interpret=_interpret(),
+            )
+        _warn_flash_fallback(dh)
+    from .flash_attention.paged import paged_attention_ref
+
+    return paged_attention_ref(
+        q, k_pages, v_pages, page_table, kv_lens, scale=scale
+    )
+
+
 def rms_norm(x, w, eps: float = 1e-6):
     if _BACKEND.startswith("pallas"):
         from .fused_rmsnorm.ops import rms_norm as op
@@ -194,6 +230,7 @@ __all__ = [
     "set_backend",
     "get_backend",
     "attention",
+    "paged_attention",
     "adaln_modulate",
     "rms_norm",
     "gated_rms_norm",

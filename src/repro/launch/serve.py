@@ -1,78 +1,129 @@
-"""Serving launcher: batched prefill + decode with continuous batching.
+"""Serving launcher: plan-driven continuous batching on the paged KV cache.
 
-CPU-scale demo on reduced configs; the same step functions are what the
-dry-run lowers for the production mesh:
+CPU-scale demo on reduced configs; the same engines, scheduler, and step
+functions are what ``benchmarks/bench_serve.py`` gates in CI:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --requests 8 --gen 16
+
+    PYTHONPATH=src python -m repro.launch.serve --arch wan2.1-1.3b --smoke \
+        --requests 4
+
+LM requests stream through :class:`repro.serve.ServeEngine` (iteration-
+level admission against the ``a + b·B·S^p`` cost model, paged
+KV-cache pool); mmdit configs route denoise sampling through
+:class:`repro.serve.DiffusionServeEngine` on the SAME scheduler — one
+admission policy, heterogeneous work.
+
+The cost model here is a synthetic seed (no fitted telemetry on a demo
+host); production serving loads the fit the training loop checkpointed.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
+from repro.core.cost_model import CostModel
+from repro.models import mmdit as M
 from repro.models import transformer as T
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.serve import DiffusionServeEngine, ServeConfig, ServeEngine
+
+#: synthetic seed fit for demo runs: ~5 ms fixed overhead, p = 2 attention
+DEMO_MODEL = CostModel(a=0.005, b=2e-7, p=2.0, r2=1.0)
+
+
+def _lat(reqs) -> tuple[float, float, float]:
+    lats = sorted(r.latency for r in reqs)
+    p50 = lats[len(lats) // 2]
+    p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+    return lats[-1], p50, p99
+
+
+def serve_lm(cfg, args) -> None:
+    serve = ServeConfig(
+        target_step=args.target_step,
+        page_size=args.page_size,
+        num_pages=args.num_pages,
+        decode_slots=args.slots,
+        max_seq=args.max_seq,
+    )
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, DEMO_MODEL, serve)
+    rng = np.random.default_rng(args.seed)
+    clock = 0.0
+    for _ in range(args.requests):
+        clock += float(rng.exponential(1.0 / args.rate))
+        plen = int(rng.integers(4, max(5, args.max_seq // 4)))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        eng.submit(prompt, 1 + int(rng.integers(1, args.gen + 1)), arrival=clock)
+    done = eng.run()
+    worst, p50, p99 = _lat(done)
+    toks = sum(len(r.out) for r in done)
+    print(
+        f"served {len(done)} LM requests in {len(eng.iterations)} iterations "
+        f"({eng.clock:.3f} s simulated): {toks} tokens generated"
+    )
+    print(f"latency p50 {p50:.3f} s, p99 {p99:.3f} s, worst {worst:.3f} s")
+    print(f"goodput {toks / eng.clock:,.1f} tok/s (simulated clock)")
+    print("sample generation (ids):", done[0].out[:16])
+
+
+def serve_mmdit(cfg, args) -> None:
+    serve = ServeConfig(
+        target_step=args.target_step,
+        page_size=args.page_size,
+        num_pages=args.num_pages,
+        decode_slots=args.slots,
+        max_seq=args.max_seq,
+    )
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    eng = DiffusionServeEngine(params, cfg, DEMO_MODEL, serve)
+    rng = np.random.default_rng(args.seed)
+    clock = 0.0
+    for _ in range(args.requests):
+        clock += float(rng.exponential(1.0 / args.rate))
+        s_vis = int(rng.integers(args.max_seq // 4, args.max_seq + 1))
+        lat = rng.standard_normal((s_vis, cfg.in_channels * 4)).astype(np.float32)
+        txt = rng.standard_normal(
+            (cfg.text_len, DiffusionServeEngine.TEXT_DIM)
+        ).astype(np.float32)
+        eng.submit(lat, txt, args.denoise_steps, arrival=clock)
+    done = eng.run()
+    worst, p50, p99 = _lat(done)
+    steps = sum(r.n_steps for r in done)
+    print(
+        f"served {len(done)} denoise requests in {len(eng.iterations)} "
+        f"iterations ({eng.clock:.3f} s simulated): {steps} denoise steps"
+    )
+    print(f"latency p50 {p50:.3f} s, p99 {p99:.3f} s, worst {worst:.3f} s")
+    print(f"sample result norm: {float(np.linalg.norm(done[0].result)):.3f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument("--gen", type=int, default=16, help="max new tokens")
+    ap.add_argument("--target-step", type=float, default=0.25)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--denoise-steps", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "mmdit":
-        raise SystemExit("mmdit serves via denoise_step; use examples/")
-
-    cap = args.prompt_len + args.gen
-    params = T.init_params(jax.random.PRNGKey(0), cfg)
-    prefill = jax.jit(make_prefill_step(cfg, cache_cap=cap), static_argnames=())
-    decode = jax.jit(make_decode_step(cfg))
-
-    key = jax.random.PRNGKey(1)
-    tokens = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
-    memory = None
-    pre_args = (params, tokens)
-    if cfg.family == "vlm":
-        memory = jax.random.normal(
-            key, (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.float32
-        ).astype(jnp.dtype(cfg.dtype))
-        pre_args = (params, tokens, memory)
-
-    t0 = time.perf_counter()
-    logits, caches = prefill(*pre_args)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(
-        f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f} ms "
-        f"({args.batch*args.prompt_len/t_prefill:,.0f} tok/s)"
-    )
-
-    out_tokens = []
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        out_tokens.append(tok)
-        logits, caches = decode(params, caches, tok, args.prompt_len + i)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(logits)
-    t_dec = time.perf_counter() - t0
-    print(
-        f"decode: {args.gen} steps x batch {args.batch} in {t_dec*1e3:.1f} ms "
-        f"({args.gen*args.batch/t_dec:,.0f} tok/s, "
-        f"{t_dec/args.gen*1e3:.2f} ms/step)"
-    )
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print("sample generation (ids):", gen[0, :16].tolist())
+        serve_mmdit(cfg, args)
+    else:
+        serve_lm(cfg, args)
 
 
 if __name__ == "__main__":

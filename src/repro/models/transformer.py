@@ -190,6 +190,92 @@ def init_cache(cfg: ModelConfig, batch: int, cap: int) -> Params:
 
 
 # --------------------------------------------------------------------------
+# paged KV-cache pools (continuous-batching serving)
+# --------------------------------------------------------------------------
+
+
+def _paged_kinds(cfg: ModelConfig) -> tuple[list[str], list[str], int, list[str]]:
+    lead, pat, n_rep, tail = cfg.superblocks()
+    bad = [k for k in [*lead, *pat, *tail] if k not in ("attn", "moe")]
+    if bad:
+        raise ValueError(
+            f"paged serving supports global-attention transformer blocks "
+            f"only (attn/moe); config has {sorted(set(bad))}"
+        )
+    return lead, pat, n_rep, tail
+
+
+def init_paged_pools(cfg: ModelConfig, num_pages: int, page_size: int) -> Params:
+    """Shared paged KV pools, cache-tree-shaped: every attention layer gets
+    ``[num_pages + 1, page_size, Hkv, dh]`` k/v pools (stacked over the
+    superblock dim for scanned blocks).  ONE page table addresses every
+    layer — a request's logical page j lives at the same physical page in
+    all of them.  The extra final page (index ``num_pages``) is the
+    scratch sink inactive decode slots and padding page-table entries
+    point at; it is fetched but always fully masked."""
+    lead, pat, n_rep, tail = _paged_kinds(cfg)
+    dt = _dtype(cfg)
+
+    def one() -> Params:
+        shape = (num_pages + 1, page_size, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    pools: Params = {
+        "lead": [one() for _ in lead],
+        "tail": [one() for _ in tail],
+    }
+    if n_rep > 0:
+        pools["blocks"] = jax.vmap(
+            lambda _: {f"s{i}": one() for i in range(len(pat))}
+        )(jnp.arange(n_rep))
+    else:
+        pools["blocks"] = {}
+    return pools
+
+
+def _scatter_pages(pool, cache, page_table, page_size: int):
+    """Write a contiguous prefill cache leaf into pool pages.
+
+    pool ``[P, ps, Hkv, dh]``, cache ``[B, S, Hkv, dh]`` with S a multiple
+    of ``page_size``; request b's pages come from ``page_table[b]``.
+    Entries past a request's allocation point at the scratch page, which
+    absorbs the padding rows (duplicate scratch writes race, but scratch
+    content is never read unmasked)."""
+    b, s = cache.shape[:2]
+    n = s // page_size
+    src = cache.reshape(b * n, page_size, *cache.shape[2:])
+    idx = page_table[:, :n].reshape(-1)
+    return pool.at[idx].set(src.astype(pool.dtype))
+
+
+def scatter_caches_into_pools(
+    caches: Params, pools: Params, cfg: ModelConfig, page_table, page_size: int
+) -> Params:
+    """Move ``forward(collect_cache=True)`` caches into the paged pools."""
+    lead, pat, n_rep, tail = _paged_kinds(cfg)
+
+    def leaf4(pool, cache):
+        return {
+            "k": _scatter_pages(pool["k"], cache["k"], page_table, page_size),
+            "v": _scatter_pages(pool["v"], cache["v"], page_table, page_size),
+        }
+
+    out: Params = {
+        "lead": [leaf4(p, c) for p, c in zip(pools["lead"], caches["lead"])],
+        "tail": [leaf4(p, c) for p, c in zip(pools["tail"], caches["tail"])],
+        "blocks": {},
+    }
+    if n_rep > 0 and caches["blocks"]:
+        out["blocks"] = {
+            f"s{i}": jax.vmap(leaf4)(
+                pools["blocks"][f"s{i}"], caches["blocks"][f"s{i}"]
+            )
+            for i in range(len(pat))
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
 # block application
 # --------------------------------------------------------------------------
 
@@ -418,6 +504,156 @@ def apply_block_decode(
     else:
         out2 = apply_mlp(bp["mlp"], h2)
     return x + out2, aux, new_cache
+
+
+def apply_block_paged_decode(
+    bp: Params,
+    x,
+    kind: str,
+    cfg: ModelConfig,
+    pool: Params,
+    page_table,  # [B, pages_max] int32
+    kv_lens,  # [B] int32: tokens already cached; the new token's position
+    *,
+    policy=None,
+    n_groups: int = 1,
+):
+    """One block for one new token per decode slot, KV in paged pools.
+
+    Unlike :func:`apply_block_decode`'s scalar ``pos``, every slot carries
+    its own position (``kv_lens[b]``) — the whole point of continuous
+    batching is that requests in one decode wave are at different depths.
+    The new token's KV is scattered into its slot's current page before
+    attending over ``kv_lens + 1`` tokens.  Inactive slots (``kv_lens ==
+    0`` with a scratch-page table row) write to and read from scratch;
+    their logits are garbage the engine never reads.
+    """
+    if kind not in ("attn", "moe"):
+        raise ValueError(f"paged decode supports attn/moe blocks, got {kind!r}")
+    b = x.shape[0]
+    h = apply_norm(bp["norm1"], x, cfg.norm, cfg.norm_eps)
+    q, k, v = _project_qkv(bp["attn"], h, cfg)
+    posv = kv_lens[:, None].astype(jnp.int32)  # [B, 1] per-slot positions
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+    p_pool, ps = pool["k"].shape[0], pool["k"].shape[1]
+    page = page_table[jnp.arange(b), kv_lens // ps]
+    flat = page * ps + kv_lens % ps  # [B] slot in the flattened pool
+    kc = (
+        pool["k"].reshape(p_pool * ps, *pool["k"].shape[2:])
+        .at[flat].set(k[:, 0].astype(pool["k"].dtype))
+        .reshape(pool["k"].shape)
+    )
+    vc = (
+        pool["v"].reshape(p_pool * ps, *pool["v"].shape[2:])
+        .at[flat].set(v[:, 0].astype(pool["v"].dtype))
+        .reshape(pool["v"].shape)
+    )
+    ctx = K.paged_attention(q[:, 0], kc, vc, page_table, kv_lens + 1)
+    out = ctx.reshape(b, 1, cfg.n_heads * cfg.head_dim) @ bp["attn"]["wo"]
+    x = x + out
+    h2 = apply_norm(bp["norm2"], x, cfg.norm, cfg.norm_eps)
+    if kind == "moe":
+        out2, _ = apply_moe(
+            bp["moe"], h2, cfg.moe, n_groups=n_groups, policy=policy, no_drop=True
+        )
+    else:
+        out2 = apply_mlp(bp["mlp"], h2)
+    return x + out2, {"k": kc, "v": vc}
+
+
+def paged_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    pools: Params,
+    page_table,  # [B, pages_max] int32
+    kv_lens,  # [B] int32
+    token,  # [B, 1] int32
+    *,
+    policy=None,
+    n_groups: int = 1,
+    unroll: bool = False,
+):
+    """One decode wave over paged pools.  Returns (logits [B, V], pools)."""
+    lead, pat, n_rep, tail = _paged_kinds(cfg)
+    x = params["embed"][token]
+    new_pools: Params = {"lead": [], "tail": [], "blocks": {}}
+
+    for bp, kind, pool in zip(params["lead"], lead, pools["lead"]):
+        x, np_ = apply_block_paged_decode(
+            bp, x, kind, cfg, pool, page_table, kv_lens,
+            policy=policy, n_groups=n_groups,
+        )
+        new_pools["lead"].append(np_)
+
+    if n_rep > 0:
+        def scan_body(x, xs):
+            bp_stack, pool_stack = xs
+            nps = {}
+            for i, kind in enumerate(pat):
+                x, np_ = apply_block_paged_decode(
+                    bp_stack[f"s{i}"], x, kind, cfg, pool_stack[f"s{i}"],
+                    page_table, kv_lens, policy=policy, n_groups=n_groups,
+                )
+                nps[f"s{i}"] = np_
+            return x, nps
+
+        x, nblocks = jax.lax.scan(
+            scan_body, x, (params["blocks"], pools["blocks"]), unroll=unroll
+        )
+        new_pools["blocks"] = nblocks
+
+    for bp, kind, pool in zip(params["tail"], tail, pools["tail"]):
+        x, np_ = apply_block_paged_decode(
+            bp, x, kind, cfg, pool, page_table, kv_lens,
+            policy=policy, n_groups=n_groups,
+        )
+        new_pools["tail"].append(np_)
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    logits = last_token_logits(x[:, -1], params["embed"])
+    return logits, new_pools
+
+
+def paged_prefill(
+    params: Params,
+    cfg: ModelConfig,
+    tokens,  # [B, S_pad] int32, padded to a page multiple
+    true_len,  # [B] int32 actual prompt lengths (padding at the end)
+    page_table,  # [B, pages_max] int32
+    pools: Params,
+    *,
+    policy=None,
+    n_groups: int = 1,
+    unroll: bool = False,
+):
+    """Run prompts and scatter their KV into pool pages.
+
+    Returns (last-true-token logits [B, V], updated pools).  Padding rows
+    run causally after the real tokens, so real tokens never attend them;
+    their KV lands wherever the page table points (scratch for entries
+    past a request's allocation) and is masked by ``kv_lens`` forever
+    after.
+    """
+    if pools["lead"]:
+        ps = pools["lead"][0]["k"].shape[1]
+    elif pools["tail"]:
+        ps = pools["tail"][0]["k"].shape[1]
+    else:  # all layers scanned: stacked leaves are [n_rep, P, ps, Hkv, dh]
+        ps = pools["blocks"]["s0"]["k"].shape[2]
+    s = tokens.shape[1]
+    if s % ps != 0:
+        raise ValueError(f"prompt width {s} not a multiple of page_size {ps}")
+    h, _, caches = forward(
+        params, cfg, tokens,
+        policy=policy, n_groups=n_groups,
+        remat=False, collect_cache=True, unroll=unroll,
+    )
+    new_pools = scatter_caches_into_pools(caches, pools, cfg, page_table, ps)
+    b = tokens.shape[0]
+    last = h[jnp.arange(b), true_len - 1]
+    logits = last_token_logits(last, params["embed"])
+    return logits, new_pools
 
 
 def _masked_decode_attention(q, kc, vc, valid):

@@ -1,0 +1,38 @@
+"""Continuous-batching serving: the paper's planner aimed at inference.
+
+The training side prices every microbatch with the fitted ``t = a +
+b·B·S^p`` cost model and packs against the dual constraint (token budget
+for memory, B·S^p for compute).  Serving is the same problem at
+iteration granularity: each engine step is one "microbatch" mixing a
+decode wave with newly admitted prefills, and admission control prices
+the candidate batch with ``CostModel.predict`` so one long prompt can
+never stall the decode wave past the latency target.
+
+Pieces:
+
+* :mod:`repro.serve.request`    — request lifecycle (LM + mmdit denoise),
+* :mod:`repro.serve.page_pool`  — free-list allocator over the paged KV
+  pool (the Pallas paged-attention kernel reads pages in place),
+* :mod:`repro.serve.scheduler`  — iteration-level, decode-first admission
+  under the dual constraint,
+* :mod:`repro.serve.engine`     — :class:`ServeEngine` (LM continuous
+  batching over paged KV) and :class:`DiffusionServeEngine` (batched
+  mmdit denoise sampling riding the same scheduler).
+"""
+
+from .engine import DiffusionServeEngine, ServeEngine
+from .page_pool import OutOfPages, PagePool
+from .request import DenoiseRequest, Request
+from .scheduler import ContinuousBatchingScheduler, IterationPlan, ServeConfig
+
+__all__ = [
+    "ContinuousBatchingScheduler",
+    "DenoiseRequest",
+    "DiffusionServeEngine",
+    "IterationPlan",
+    "OutOfPages",
+    "PagePool",
+    "Request",
+    "ServeConfig",
+    "ServeEngine",
+]

@@ -217,6 +217,7 @@ class EmulatedEngine(ExecutionEngine):
                             batch_size=bucket.batch_size,
                             seq_len=bucket.seq_len,
                             compute_time=dt * scale,
+                            ring_ranks=getattr(bucket, "n_ranks", 1),
                         )
                     )
                 acc = grads if acc is None else self._acc_add(acc, grads)

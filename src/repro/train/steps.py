@@ -201,11 +201,49 @@ def make_decode_step(cfg: ModelConfig, policy=None, unroll: bool = False) -> Cal
     return decode_step
 
 
+def make_paged_prefill_step(cfg: ModelConfig, policy=None,
+                            unroll: bool = False) -> Callable:
+    """Prefill into paged KV pools (continuous-batching serving): run the
+    padded prompts, scatter their caches into pool pages, and return the
+    logits at each request's true last token."""
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def paged_prefill_step(params, tokens, true_len, page_table, pools):
+        return T.paged_prefill(
+            params, cfg, tokens, true_len, page_table, pools,
+            policy=policy, n_groups=n_groups, unroll=unroll,
+        )
+
+    return paged_prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, policy=None,
+                           unroll: bool = False) -> Callable:
+    """One decode wave over paged pools: every slot carries its own
+    position (``kv_lens``), so one compiled step serves requests at
+    arbitrary mixed depths — the iteration unit of continuous batching."""
+    n_groups = policy.n_dispatch_groups if policy is not None else 1
+
+    def paged_decode_step(params, pools, page_table, kv_lens, token):
+        return T.paged_decode_step(
+            params, cfg, pools, page_table, kv_lens, token,
+            policy=policy, n_groups=n_groups, unroll=unroll,
+        )
+
+    return paged_decode_step
+
+
 def make_denoise_step(cfg: ModelConfig, policy=None) -> Callable:
     """MMDiT serving: one velocity evaluation (the unit of diffusion
-    sampling; a sampler chains these)."""
+    sampling; a sampler chains these).  The optional segment ids scope
+    attention per clip so the continuous-batching engine can pad mixed
+    clip lengths into one wave (-1 = padding)."""
 
-    def denoise_step(params, latents, text, t):
-        return M.forward(params, cfg, latents, text, t, policy=policy, remat=False)
+    def denoise_step(params, latents, text, t, segment_ids=None,
+                     text_segment_ids=None):
+        return M.forward(
+            params, cfg, latents, text, t, policy=policy, remat=False,
+            segment_ids=segment_ids, text_segment_ids=text_segment_ids,
+        )
 
     return denoise_step

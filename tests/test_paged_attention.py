@@ -1,0 +1,247 @@
+"""Paged-attention kernel vs contiguous-cache oracle, and the full-model
+paged serving path vs per-request contiguous prefill/decode.
+
+The kernel runs in interpret mode (CPU executes the Pallas body).  The
+oracle is plain masked softmax over the CONTIGUOUS cache each page layout
+encodes — so fragmented and aligned layouts must produce identical
+results, and the <=1e-5 f32 / <=1e-3 bf16 gates catch any page-addressing
+or masking drift.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels as K
+from repro.configs.registry import get_smoke_config
+from repro.kernels.flash_attention.paged import (
+    paged_attention_pallas,
+    paged_attention_ref,
+    paged_tile_counts,
+)
+from repro.models import transformer as T
+from repro.train.steps import (
+    make_decode_step,
+    make_paged_decode_step,
+    make_paged_prefill_step,
+    make_prefill_step,
+)
+
+
+def _contiguous_oracle(q, k, v, kv_lens):
+    """Masked softmax over a contiguous [B, S, Hkv, dh] cache (GQA)."""
+    b, hq, dh = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=2).astype(jnp.float32)
+    vv = jnp.repeat(v, g, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) * dh**-0.5, kk)
+    valid = jnp.arange(k.shape[1])[None, :] < kv_lens[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, :], p, 0.0)  # kv_len==0 rows -> zeros
+    return jnp.einsum("bhs,bshd->bhd", p, vv)
+
+
+def _paged_layout(k, v, kv_lens, page_size, num_pages, *, fragmented, seed=0):
+    """Scatter a contiguous cache into a pool under a (possibly permuted)
+    page table.  Returns (k_pages, v_pages, table [B, pages_max])."""
+    b, s_max, hkv, dh = k.shape
+    pages_max = -(-s_max // page_size)
+    rng = np.random.default_rng(seed)
+    scratch = num_pages
+    kp = np.zeros((num_pages + 1, page_size, hkv, dh), np.float32)
+    vp = np.zeros_like(kp)
+    table = np.full((b, pages_max), scratch, np.int32)
+    order = (
+        rng.permutation(num_pages) if fragmented else np.arange(num_pages)
+    )
+    nxt = 0
+    for bi in range(b):
+        n = -(-int(kv_lens[bi]) // page_size)
+        for j in range(n):
+            pg = int(order[nxt])
+            nxt += 1
+            lo, hi = j * page_size, min((j + 1) * page_size, s_max)
+            kp[pg, : hi - lo] = np.asarray(k[bi, lo:hi])
+            vp[pg, : hi - lo] = np.asarray(v[bi, lo:hi])
+            table[bi, j] = pg
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(table)
+
+
+CASES = [
+    # (B, Hq, Hkv, dh, page_size, kv_lens, fragmented)
+    (3, 4, 2, 128, 8, (11, 24, 5), True),  # GQA g=2, fragmented
+    (3, 4, 2, 128, 8, (16, 8, 24), True),  # page-aligned lens, fragmented
+    (2, 8, 2, 128, 16, (33, 64), False),  # g=4, aligned identity layout
+    (2, 4, 4, 128, 8, (1, 13), True),  # MHA, single-token context
+    (3, 4, 2, 128, 8, (0, 9, 0), True),  # inactive slots -> exact zeros
+]
+
+
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", CASES)
+def test_paged_kernel_vs_contiguous_oracle(case, dt):
+    b, hq, hkv, dh, ps, lens, fragmented = case
+    s_max = 64
+    key = jax.random.PRNGKey(hash(case) % (2**31))
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, s_max, hkv, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, s_max, hkv, dh), jnp.float32)
+    # cast FIRST so kernel and oracle consume identical values; the gate
+    # then measures kernel arithmetic + the final output downcast only
+    q, k, v = q.astype(dt), k.astype(dt), v.astype(dt)
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    kp, vp, table = _paged_layout(
+        k.astype(jnp.float32), v.astype(jnp.float32), lens, ps,
+        num_pages=b * (s_max // ps), fragmented=fragmented,
+    )
+    # the oracle is quantized to the working dtype at the end, exactly
+    # like the kernel's output cast — the gate then measures kernel
+    # arithmetic alone, not the unavoidable one-ulp output rounding
+    ref = _contiguous_oracle(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        kv_lens,
+    ).astype(dt).astype(jnp.float32)
+    out = paged_attention_pallas(
+        q, kp.astype(dt), vp.astype(dt), table, kv_lens, interpret=True
+    ).astype(jnp.float32)
+    tol = 1e-5 if dt == jnp.float32 else 1e-3
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err <= tol, f"{case} {dt}: max err {err}"
+    for bi, n in enumerate(lens):
+        if n == 0:  # inactive slot: exactly zero, not just close
+            assert float(jnp.max(jnp.abs(out[bi]))) == 0.0
+
+
+@pytest.mark.parametrize("case", CASES[:2])
+def test_paged_jnp_ref_matches_kernel(case):
+    """The any-head-dim jnp twin is the same function as the kernel."""
+    b, hq, hkv, dh, ps, lens, fragmented = case
+    s_max = 64
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, s_max, hkv, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, s_max, hkv, dh), jnp.float32)
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    kp, vp, table = _paged_layout(
+        k, v, lens, ps, num_pages=b * (s_max // ps), fragmented=fragmented
+    )
+    a = paged_attention_pallas(q, kp, vp, table, kv_lens, interpret=True)
+    r = paged_attention_ref(q, kp, vp, table, kv_lens)
+    assert float(jnp.max(jnp.abs(a - r))) <= 1e-5
+
+
+def test_fragmented_equals_aligned_layout():
+    """The same logical cache through two physical layouts is bitwise the
+    same computation: fragmentation must be invisible."""
+    b, hq, hkv, dh, ps, s_max = 2, 4, 2, 128, 8, 48
+    lens = [19, 37]
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hq, dh), jnp.float32)
+    k = jax.random.normal(kk, (b, s_max, hkv, dh), jnp.float32)
+    v = jax.random.normal(kv, (b, s_max, hkv, dh), jnp.float32)
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    outs = []
+    for fragmented in (False, True):
+        kp, vp, table = _paged_layout(
+            k, v, lens, ps, num_pages=b * (s_max // ps),
+            fragmented=fragmented, seed=11,
+        )
+        outs.append(
+            paged_attention_pallas(q, kp, vp, table, kv_lens, interpret=True)
+        )
+    np.testing.assert_array_equal(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_dispatcher_falls_back_for_small_head_dim():
+    """dh % 128 != 0 routes to the jnp ref (with a one-time warning), so
+    smoke configs serve correctly on any backend."""
+    b, hq, hkv, dh, ps = 2, 4, 2, 16, 8
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (b, hq, dh), jnp.float32)
+    kp = jax.random.normal(key, (9, ps, hkv, dh), jnp.float32)
+    vp = jax.random.normal(key, (9, ps, hkv, dh), jnp.float32)
+    table = jnp.asarray([[0, 1, 8], [2, 8, 8]], jnp.int32)
+    kv_lens = jnp.asarray([13, 6], jnp.int32)
+    old = K.get_backend()
+    K.set_backend("pallas_interpret")
+    try:
+        out = K.paged_attention(q, kp, vp, table, kv_lens)
+    finally:
+        K.set_backend(old)
+    ref = paged_attention_ref(q, kp, vp, table, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+def test_paged_tile_counts():
+    executed, total = paged_tile_counts([11, 24, 5, 0], page_size=8, pages_max=6)
+    assert total == 24
+    assert executed == 2 + 3 + 1 + 0
+
+
+def test_model_paged_path_matches_contiguous_serving():
+    """Full-model parity: batched paged prefill + shared decode waves over
+    FRAGMENTED pages produce token-identical generations to per-request
+    contiguous prefill+decode on the smoke llama config."""
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    ps, num_pages, pages_max = 8, 32, 4  # max 32 tokens/request
+    lens = [11, 24, 5]
+    max_new = 4
+    b = len(lens)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(0, cfg.vocab, size=n).astype(np.int32) for n in lens
+    ]
+
+    # fragmented page tables: permuted physical pages, scratch elsewhere
+    scratch = num_pages
+    order = rng.permutation(num_pages)
+    table = np.full((b, pages_max), scratch, np.int32)
+    nxt = 0
+    for bi, n in enumerate(lens):
+        for j in range(-(-(n + max_new) // ps)):
+            table[bi, j] = int(order[nxt])
+            nxt += 1
+
+    pools = T.init_paged_pools(cfg, num_pages, ps)
+    s_pad = 32
+    tokens = np.zeros((b, s_pad), np.int32)
+    for bi, pr in enumerate(prompts):
+        tokens[bi, : len(pr)] = pr
+    prefill = make_paged_prefill_step(cfg)
+    decode = make_paged_decode_step(cfg)
+    logits, pools = prefill(
+        params, jnp.asarray(tokens), jnp.asarray(lens, jnp.int32),
+        jnp.asarray(table), pools,
+    )
+    outs = [[int(jnp.argmax(logits[bi]))] for bi in range(b)]
+    kv_lens = np.asarray(lens, np.int32)
+    for _ in range(max_new - 1):
+        tok = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
+        logits, pools = decode(
+            params, pools, jnp.asarray(table), jnp.asarray(kv_lens), tok
+        )
+        kv_lens += 1
+        for bi in range(b):
+            outs[bi].append(int(jnp.argmax(logits[bi])))
+
+    # reference: per-request contiguous serving
+    pf = make_prefill_step(cfg, cache_cap=s_pad + max_new)
+    dc = make_decode_step(cfg)
+    for bi, pr in enumerate(prompts):
+        logits, caches = pf(params, jnp.asarray(pr)[None, :])
+        ref = [int(jnp.argmax(logits[0]))]
+        pos = len(pr)
+        for _ in range(max_new - 1):
+            logits, caches = dc(
+                params, caches, jnp.asarray([[ref[-1]]]), jnp.asarray(pos)
+            )
+            ref.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        assert ref == outs[bi], f"request {bi}: {ref} != {outs[bi]}"

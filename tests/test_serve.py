@@ -1,0 +1,293 @@
+"""Continuous-batching serving: admission invariants, page-pool hygiene,
+and engine-vs-single-stream parity.
+
+The scheduler tests drive the policy directly with synthetic requests (no
+arrays); the engine tests run the smoke llama / wan configs end to end
+and check the generations against per-request single-stream serving.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.cost_model import CostModel
+from repro.models import mmdit as M
+from repro.models import transformer as T
+from repro.serve import (
+    ContinuousBatchingScheduler,
+    DiffusionServeEngine,
+    OutOfPages,
+    PagePool,
+    Request,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.train.steps import (
+    make_decode_step,
+    make_denoise_step,
+    make_prefill_step,
+)
+
+MODEL = CostModel(a=0.01, b=1e-6, p=2.0, r2=1.0)
+
+
+def _req(rid, plen, max_new=8, arrival=0.0, ctx=0):
+    r = Request(
+        rid, np.zeros(plen, np.int32), max_new, arrival=arrival
+    )
+    r.ctx = ctx
+    return r
+
+
+# -- page pool ---------------------------------------------------------------
+
+
+def test_page_pool_alloc_free_leakfree():
+    pool = PagePool(8, 16)
+    a = pool.alloc(3, owner=1)
+    b = pool.alloc(2, owner=2)
+    assert a == [0, 1, 2] and b == [3, 4]
+    assert pool.num_free == 3 and pool.free_tokens == 48
+    pool.free(a, owner=1)
+    pool.free(b, owner=2)
+    pool.assert_empty()
+    # deterministic replay: the same op sequence on a fresh pool yields
+    # the same pages at every step
+    twin = PagePool(8, 16)
+    assert twin.alloc(3, owner=1) == a and twin.alloc(2, owner=2) == b
+    twin.free(a, owner=1)
+    twin.free(b, owner=2)
+    assert twin.alloc(4, owner=3) == pool.alloc(4, owner=3)
+
+
+def test_page_pool_rejects_double_free_and_exhaustion():
+    pool = PagePool(4, 8)
+    pages = pool.alloc(4, owner=1)
+    with pytest.raises(OutOfPages):
+        pool.alloc(1, owner=2)
+    with pytest.raises(ValueError):
+        pool.free(pages[:1], owner=2)  # not the owner
+    pool.free(pages, owner=1)
+    with pytest.raises(ValueError):
+        pool.free(pages[:1], owner=1)  # already freed
+    assert pool.pages_for(0) == 0 and pool.pages_for(17) == 3
+
+
+# -- admission policy --------------------------------------------------------
+
+
+def _cfg(**kw):
+    kw.setdefault("target_step", 0.1)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("num_pages", 64)
+    kw.setdefault("max_seq", 256)
+    return ServeConfig(**kw)
+
+
+def test_plan_respects_both_constraints():
+    """Admission never exceeds M_comp - decode_load (compute) nor the
+    free-token budget (memory), whichever binds first."""
+    cfg = _cfg()
+    sch = ContinuousBatchingScheduler(MODEL, cfg)
+    running = [_req(90 + i, 8, ctx=64) for i in range(3)]
+    waiting = [_req(i, 100, max_new=50) for i in range(8)]
+    plan = sch.plan(
+        waiting, running, free_tokens=cfg.mem_tokens, free_slots=8
+    )
+    assert plan.prefills  # something fits
+    assert plan.total_load <= sch.m_comp + 1e-9
+    assert plan.decode_load == sch.decode_load(running)
+    # memory binds: 2 tokens free, nothing admitted
+    plan = sch.plan(waiting, running, free_tokens=2, free_slots=8)
+    assert not plan.prefills
+    # slots bind
+    plan = sch.plan(waiting, running, free_tokens=cfg.mem_tokens, free_slots=0)
+    assert not plan.prefills
+
+
+def test_decode_first_no_starvation_under_prefill_flood():
+    """Simulated flood: decode waves keep full service while long prompts
+    queue; running requests finish in exactly max_new iterations."""
+    cfg = _cfg()
+    sch = ContinuousBatchingScheduler(MODEL, cfg)
+    running = [_req(100 + i, 16, max_new=12, ctx=16) for i in range(4)]
+    flood = [_req(i, 240, max_new=8, arrival=0.0) for i in range(50)]
+    decode_iters = 0
+    while any(r.ctx < r.prompt_len + r.max_new for r in running):
+        live = [r for r in running if r.ctx < r.prompt_len + r.max_new]
+        plan = sch.plan(flood, live, free_tokens=64, free_slots=0)
+        # the flood can never displace decode service
+        assert plan.decode_load == sch.decode_load(live)
+        assert plan.total_load <= sch.m_comp + 1e-9
+        for r in live:
+            r.ctx += 1
+        decode_iters += 1
+        assert decode_iters <= 12
+    assert decode_iters == 12
+
+
+def test_fcfs_head_blocks_queue():
+    """Strict FCFS: when the head doesn't fit, nothing behind it jumps."""
+    cfg = _cfg()
+    sch = ContinuousBatchingScheduler(MODEL, cfg)
+    big = _req(0, 240, max_new=16)
+    small = _req(1, 16, max_new=16)
+    running = [_req(9, 8, ctx=200)]
+    free = cfg.mem_tokens
+    plan = sch.plan([big, small], running, free_tokens=free, free_slots=8)
+    if big.admit_load(MODEL.p) > sch.m_comp - sch.decode_load(running):
+        assert small not in plan.prefills
+
+
+def test_oversize_prompt_runs_alone_and_eventually():
+    """A prompt with S^p > M_comp is admitted only when nothing runs, and
+    FCFS guarantees it does get scheduled once the wave drains."""
+    sch = ContinuousBatchingScheduler(
+        MODEL, _cfg(target_step=0.011, max_seq=256)
+    )
+    giant = _req(0, 256, max_new=0 + 1)
+    assert giant.admit_load(MODEL.p) > sch.m_comp
+    running = [_req(9, 8, ctx=8)]
+    plan = sch.plan([giant], running, free_tokens=10_000, free_slots=4)
+    assert not plan.prefills  # never beside a running wave
+    plan = sch.plan([giant], [], free_tokens=10_000, free_slots=4)
+    assert plan.prefills == [giant] and plan.oversize
+
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(target_step=0.1, page_size=16, max_seq=250)
+    with pytest.raises(ValueError):
+        ServeConfig(target_step=0.1, decode_slots=0)
+    cfg = ServeConfig(target_step=0.1, num_pages=4, page_size=16,
+                      m_mem_tokens=1 << 20, max_seq=64)
+    assert cfg.mem_tokens == 64  # clamped to pool capacity
+
+
+# -- LM engine ---------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = get_smoke_config("llama3.2-1b")
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _single_stream(cfg, params, prompt, max_new):
+    pf = make_prefill_step(cfg, cache_cap=64)
+    dc = make_decode_step(cfg)
+    logits, caches = pf(params, jnp.asarray(prompt)[None, :])
+    out = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    for _ in range(max_new - 1):
+        logits, caches = dc(
+            params, caches, jnp.asarray([[out[-1]]]), jnp.asarray(pos)
+        )
+        out.append(int(jnp.argmax(logits[0])))
+        pos += 1
+    return out
+
+
+def test_engine_matches_single_stream_and_frees_pages(lm_setup):
+    cfg, params = lm_setup
+    serve = ServeConfig(
+        target_step=0.1, page_size=8, num_pages=32, decode_slots=3,
+        max_seq=32,
+    )
+    eng = ServeEngine(params, cfg, MODEL, serve)
+    rng = np.random.default_rng(0)
+    specs = []
+    clock = 0.0
+    for i in range(4):
+        clock += float(rng.exponential(0.01))
+        plen = int(rng.integers(3, 14))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        specs.append((prompt, 3 + (i % 2), clock))
+        eng.submit(prompt, specs[-1][1], arrival=clock)
+    done = eng.run()  # run() asserts the page pool drained
+    assert len(done) == 4
+    for r in sorted(done, key=lambda r: r.rid):
+        prompt, max_new, arrival = specs[r.rid]
+        assert r.out == _single_stream(cfg, params, prompt, max_new)
+        assert r.t_done >= r.t_first >= r.arrival == arrival
+    eng.pool.assert_empty()
+
+
+def test_engine_decode_never_starves(lm_setup):
+    """Engine-level flood: one running request must decode EVERY iteration
+    from its prefill to its completion, long-prompt queue notwithstanding."""
+    cfg, params = lm_setup
+    serve = ServeConfig(
+        target_step=0.0101 + 28**2 * 1e-6, page_size=8, num_pages=32,
+        decode_slots=2, max_seq=32, max_prefills_per_step=1,
+    )
+    eng = ServeEngine(params, cfg, MODEL, serve)
+    rng = np.random.default_rng(1)
+    first = eng.submit(
+        rng.integers(0, cfg.vocab, size=4).astype(np.int32), 6, arrival=0.0
+    )
+    for _ in range(4):  # long prompts that barely fit the budget alone
+        eng.submit(
+            rng.integers(0, cfg.vocab, size=24).astype(np.int32),
+            4, arrival=0.0,
+        )
+    eng.run()
+    its = eng.iterations
+    start = next(i for i, it in enumerate(its) if first.rid in it["prefills"])
+    end = max(i for i, it in enumerate(its) if first.rid in it["decodes"])
+    for i in range(start + 1, end + 1):
+        assert first.rid in its[i]["decodes"], f"starved at iteration {i}"
+
+
+def test_engine_rejects_oversized_requests(lm_setup):
+    cfg, params = lm_setup
+    serve = ServeConfig(
+        target_step=0.1, page_size=8, num_pages=8, decode_slots=2, max_seq=32
+    )
+    eng = ServeEngine(params, cfg, MODEL, serve)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(30, np.int32), 8)  # 38 > max_seq
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(0, np.int32), 8)
+
+
+# -- diffusion engine --------------------------------------------------------
+
+
+def test_diffusion_engine_matches_single_clip():
+    cfg = get_smoke_config("wan2.1-1.3b")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    serve = ServeConfig(
+        target_step=0.5, page_size=8, num_pages=64, decode_slots=2,
+        max_seq=24,
+    )
+    eng = DiffusionServeEngine(params, cfg, MODEL, serve)
+    rng = np.random.default_rng(2)
+    specs = []
+    for i in range(3):
+        s_vis = int(rng.integers(8, 25))
+        lat = rng.standard_normal((s_vis, cfg.in_channels * 4)).astype(
+            np.float32
+        )
+        txt = rng.standard_normal(
+            (cfg.text_len, DiffusionServeEngine.TEXT_DIM)
+        ).astype(np.float32)
+        n_steps = 2 + (i % 2)
+        specs.append((lat, txt, n_steps))
+        eng.submit(lat, txt, n_steps, arrival=0.05 * i)
+    done = eng.run()
+    assert len(done) == 3
+    dn = make_denoise_step(cfg)
+    for r in sorted(done, key=lambda r: r.rid):
+        lat, txt, n_steps = specs[r.rid]
+        x = jnp.asarray(lat)[None]
+        for k in range(n_steps):
+            t = jnp.array([1.0 - k / n_steps], jnp.float32)
+            v = dn(params, x, jnp.asarray(txt)[None], t)
+            x = x - v / n_steps
+        err = float(np.max(np.abs(np.asarray(x[0]) - r.result)))
+        assert err <= 2e-5, f"request {r.rid}: err {err}"
+        assert r.t_done >= r.t_first >= r.arrival
