@@ -98,7 +98,8 @@ def _simulate_continuous(reqs: list[SimReq], cfg: ServeConfig) -> tuple[float, i
             waiting.remove(r)
             r.ctx = r.plen
             r.n_gen = 1
-            free_tokens -= r.reserve_tokens
+            # page-granular, exactly like the engine's pool accounting
+            free_tokens -= cfg.page_tokens(r.reserve_tokens)
         for r in running:
             r.ctx += 1
             r.n_gen += 1
@@ -108,7 +109,7 @@ def _simulate_continuous(reqs: list[SimReq], cfg: ServeConfig) -> tuple[float, i
         for r in [*running, *plan.prefills]:
             if r.n_gen >= r.max_new:
                 r.t_done = clock
-                free_tokens += r.reserve_tokens
+                free_tokens += cfg.page_tokens(r.reserve_tokens)
             else:
                 still.append(r)
         running = still

@@ -107,9 +107,10 @@ class ServeEngine:
                 f"prompt+max_new = {reserve} exceeds max_seq "
                 f"{self.serve.max_seq}"
             )
-        if reserve > self.serve.mem_tokens:
+        if self.serve.page_tokens(reserve) > self.serve.mem_tokens:
             raise ValueError(
-                f"request needs {reserve} tokens, budget is "
+                f"request needs {self.serve.page_tokens(reserve)} tokens "
+                f"({reserve} rounded to whole pages), budget is "
                 f"{self.serve.mem_tokens}"
             )
         r = Request(self._next_rid, prompt, max_new, arrival=float(arrival))
@@ -304,7 +305,7 @@ class DiffusionServeEngine:
                 f"clip of {latents.shape[0]} tokens exceeds max_seq "
                 f"{self.max_vis}"
             )
-        if latents.shape[0] > self.serve.mem_tokens:
+        if self.serve.page_tokens(latents.shape[0]) > self.serve.mem_tokens:
             raise ValueError("clip exceeds the token budget")
         if text.shape[0] > self.cfg.text_len:
             raise ValueError(

@@ -6,7 +6,9 @@ per-iteration latency back-derives a compute budget ``M_comp = (target -
 a) / b`` in B·S^p load units — exactly the training planner's budget, now
 spent on serving traffic.  The token budget (``m_mem_tokens``) is the
 memory half: a request reserves its worst-case cache residency at
-admission, so decode can never run out of pages mid-generation.
+admission, rounded up to whole pages because that is what the pool
+actually hands out, so decode can never run out of pages mid-generation
+— not even when one plan admits several non-page-aligned reserves.
 
 The policy is **decode-first**: the running wave is always serviced in
 full — admission only spends ``M_comp - decode_load`` on new prefills, so
@@ -62,6 +64,12 @@ class ServeConfig:
     def pages_max(self) -> int:
         return self.max_seq // self.page_size
 
+    def page_tokens(self, tokens: int) -> int:
+        """Token charge for ``tokens`` cache slots: whole pages.  The pool
+        allocates page-granular, so admission must price reservations the
+        same way or one plan can overcommit the pool."""
+        return -(-int(tokens) // self.page_size) * self.page_size
+
 
 @dataclasses.dataclass
 class IterationPlan:
@@ -109,6 +117,10 @@ class ContinuousBatchingScheduler:
             if len(admitted) >= self.cfg.max_prefills_per_step:
                 break
             load = r.admit_load(p)
+            # the reservation is priced in whole pages — the pool allocates
+            # page-granular, so exact-token debits could admit a set of
+            # requests whose page needs overcommit the pool within one plan
+            need = self.cfg.page_tokens(r.reserve_tokens)
             if load > self.m_comp:
                 # can never co-schedule under the budget: run it alone
                 # once nothing is decoding (FCFS keeps the queue behind it
@@ -116,19 +128,19 @@ class ContinuousBatchingScheduler:
                 if (
                     not running
                     and not admitted
-                    and r.reserve_tokens <= tokens
+                    and need <= tokens
                     and slots > 0
                 ):
                     admitted.append(r)
                     pload += load
                     oversize = True
                 break
-            if load > budget or r.reserve_tokens > tokens or slots < 1:
+            if load > budget or need > tokens or slots < 1:
                 break  # strict FCFS: the head of the queue blocks it
             admitted.append(r)
             pload += load
             budget -= load
-            tokens -= r.reserve_tokens
+            tokens -= need
             slots -= 1
         return IterationPlan(admitted, dload, pload, oversize=oversize)
 

@@ -128,6 +128,26 @@ def test_decode_first_no_starvation_under_prefill_flood():
     assert decode_iters == 12
 
 
+def test_plan_charges_page_rounded_reserves():
+    """Admission prices reservations in whole pages: non-page-aligned
+    reserves must not overcommit the pool within a single plan (reviewer
+    repro: page_size=16, 7 pages, reserves 49+60 need 8 pages)."""
+    cfg = _cfg(num_pages=7, max_seq=112)
+    sch = ContinuousBatchingScheduler(MODEL, cfg)
+    assert cfg.page_tokens(49) == 64 and cfg.page_tokens(60) == 64
+    waiting = [_req(0, 9, max_new=40), _req(1, 20, max_new=40)]
+    plan = sch.plan(
+        waiting, [], free_tokens=cfg.mem_tokens, free_slots=8
+    )
+    # 112 free tokens cover the exact reserves (109) but not the 8 pages
+    # they occupy — only the head fits
+    assert plan.prefills == [waiting[0]]
+    pages = sum(
+        PagePool(7, 16).pages_for(r.reserve_tokens) for r in plan.prefills
+    )
+    assert pages <= cfg.num_pages
+
+
 def test_fcfs_head_blocks_queue():
     """Strict FCFS: when the head doesn't fit, nothing behind it jumps."""
     cfg = _cfg()
@@ -252,6 +272,34 @@ def test_engine_rejects_oversized_requests(lm_setup):
         eng.submit(np.zeros(30, np.int32), 8)  # 38 > max_seq
     with pytest.raises(ValueError):
         eng.submit(np.zeros(0, np.int32), 8)
+    # a reserve whose page rounding exceeds the budget can never be
+    # admitted — reject at submit rather than queue forever
+    tight = ServeConfig(
+        target_step=0.1, page_size=8, num_pages=8, decode_slots=2,
+        max_seq=32, m_mem_tokens=30,
+    )
+    eng = ServeEngine(params, cfg, MODEL, tight)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(20, np.int32), 9)  # 29 tokens -> 32 > 30
+
+
+def test_engine_never_overcommits_pool_on_unaligned_reserves(lm_setup):
+    """Two requests whose exact reserves (25 + 30 = 55) fit the 56-token
+    budget but whose page needs (4 + 4) exceed the 7-page pool: admission
+    must stagger them instead of crashing _start with OutOfPages."""
+    cfg, params = lm_setup
+    serve = ServeConfig(
+        target_step=0.1, page_size=8, num_pages=7, decode_slots=2,
+        max_seq=56,
+    )
+    eng = ServeEngine(params, cfg, MODEL, serve)
+    rng = np.random.default_rng(3)
+    eng.submit(rng.integers(0, cfg.vocab, size=20).astype(np.int32), 5)
+    eng.submit(rng.integers(0, cfg.vocab, size=25).astype(np.int32), 5)
+    done = eng.run()  # OutOfPages would propagate out of run()
+    assert len(done) == 2
+    assert all(len(r.out) == r.max_new for r in done)
+    eng.pool.assert_empty()
 
 
 # -- diffusion engine --------------------------------------------------------
